@@ -1,0 +1,35 @@
+"""Benchmark utilities: timing + the paper's deployment comparisons.
+
+The paper's GPU-vs-CPU columns become structure-vs-structure comparisons
+on this host: the *naïve* deployment (host-driven loop, full D2H+H2D
+round-trip per iteration — the strawman of §3.3) against the *persistent*
+deployment (the Loop-of-stencil-reduce while_loop, device memory
+persistence), and 1-device vs 1:n (subprocess with placeholder devices).
+Wall-clock ratios, not absolute times, carry the claims.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            **kw) -> float:
+    """Median wall-time in seconds (blocking on the result)."""
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

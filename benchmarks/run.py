@@ -1,0 +1,55 @@
+"""Benchmark harness — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+    Table 1 (Helmholtz)      -> bench_helmholtz
+    Table 2 (Sobel stream)   -> bench_sobel
+    Table 3 (restoration)    -> bench_restoration
+    §Roofline (TPU target)   -> bench_roofline (reads runs/dryrun)
+
+``--quick`` shrinks sizes for CI-speed runs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: helmholtz,sobel,restoration,roofline")
+    args = ap.parse_args()
+
+    from . import (bench_helmholtz, bench_restoration, bench_roofline,
+                   bench_sobel)
+
+    suites = {
+        "helmholtz": lambda: bench_helmholtz.run(
+            sizes=(256, 512) if args.quick else (512, 1024, 2048)),
+        "sobel": lambda: bench_sobel.run(
+            sizes=(256, 512) if args.quick else (512, 1024, 2048),
+            stream_n=20 if args.quick else 100),
+        "restoration": lambda: bench_restoration.run(
+            resolutions=("vga",) if args.quick else ("vga", "720p"),
+            frames=2 if args.quick else 8),
+        "roofline": bench_roofline.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:  # keep the harness running
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}_suite,-1,ERROR:{type(e).__name__}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Paper §4.3 — two-phase video restoration over a frame stream.
+
+pipe(read, detect, ofarm(restore), write): adaptive-median detection
+(escalating 3×3→7×7 stencil) + iterative edge-preserving regularisation
+(Loop-of-stencil-reduce -d), streamed with the StreamRunner.
+
+    PYTHONPATH=src python examples/video_restoration.py \
+        [--frames 8] [--noise 0.3] [--res vga]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import StreamRunner
+from repro.kernels import ops
+
+RES = {"vga": (480, 640), "720p": (720, 1280), "tiny": (96, 160)}
+
+
+def synth_video(shape, frames, noise, seed=0):
+    yy, xx = np.mgrid[0:shape[0], 0:shape[1]]
+    rng = np.random.default_rng(seed)
+    for t in range(frames):
+        base = 0.5 + 0.3 * np.sin(xx / 25.0 + t / 3) \
+            * np.cos(yy / 18.0) + 0.2 * (((xx + 4 * t) // 40 + yy // 30)
+                                         % 2)
+        clean = np.clip(base, 0, 1).astype(np.float32)
+        imp = rng.uniform(size=shape) < noise
+        sp = np.where(rng.uniform(size=shape) < 0.5, 0.0, 1.0)
+        yield clean, np.where(imp, sp, clean).astype(np.float32)
+
+
+def psnr(a, b):
+    return -10 * np.log10(np.mean((np.asarray(a) - np.asarray(b)) ** 2)
+                          + 1e-12)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=8)
+    ap.add_argument("--noise", type=float, default=0.3)
+    ap.add_argument("--res", choices=list(RES), default="tiny")
+    args = ap.parse_args()
+
+    pairs = list(synth_video(RES[args.res], args.frames, args.noise))
+    cleans = [c for c, _ in pairs]
+    noisys = [n for _, n in pairs]
+
+    def restore_one(frame):
+        mask, repaired = ops.adaptive_median_detect(frame)
+        out, delta, iters = ops.restore(repaired, mask, max_iters=50)
+        return out, iters
+
+    worker = jax.jit(jax.vmap(restore_one))
+    done = []
+    t0 = time.perf_counter()
+    n = StreamRunner(worker=worker, source=lambda: iter(noisys),
+                     sink=lambda o: done.append(o), batch=2).run()
+    dt = time.perf_counter() - t0
+
+    ps_in = np.mean([psnr(noisys[i], cleans[i]) for i in range(n)])
+    ps_out = np.mean([psnr(done[i][0], cleans[i]) for i in range(n)])
+    its = [int(done[i][1]) for i in range(n)]
+    print(f"restored {n} {args.res} frames @ {args.noise:.0%} noise in "
+          f"{dt:.2f}s ({n / dt:.2f} fps)")
+    print(f"PSNR {ps_in:.1f} -> {ps_out:.1f} dB; iterations/frame: {its}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""repro.core — the Loop-of-stencil-reduce pattern (paper's contribution).
+
+Public API:
+    semantics   — executable formal semantics (test oracle)
+    stencil     — production stencil application (taps / windows / indexed)
+    reduce      — /(⊕) tree reduce + two-phase reduce
+    pattern     — LoopOfStencilReduce + -i/-d/-s variants (lax.while_loop)
+    halo        — multi-device 1:n mode (shard_map + ppermute halo swap)
+    streaming   — pipe / farm / ofarm stream tier
+"""
+from .semantics import Boundary
+from .stencil import TapAccessor, stencil_taps, stencil_windows, conv_taps
+from .reduce import tree_reduce, two_phase_reduce, MONOIDS
+from .pattern import (LoopOfStencilReduce, LoopResult, loop_of_stencil_reduce,
+                      loop_of_stencil_reduce_d, loop_of_stencil_reduce_s)
+from .halo import (GridPartition, exchange_halo,
+                   distributed_loop_of_stencil_reduce)
+from .streaming import pipe, farm, ofarm, sharded_farm, StreamRunner
+
+__all__ = [
+    "Boundary", "TapAccessor", "stencil_taps", "stencil_windows",
+    "conv_taps", "tree_reduce", "two_phase_reduce", "MONOIDS",
+    "LoopOfStencilReduce", "LoopResult", "loop_of_stencil_reduce",
+    "loop_of_stencil_reduce_d", "loop_of_stencil_reduce_s", "GridPartition",
+    "exchange_halo", "distributed_loop_of_stencil_reduce", "pipe", "farm",
+    "ofarm", "sharded_farm", "StreamRunner",
+]

@@ -1,0 +1,210 @@
+"""The Loop-of-stencil-reduce pattern — production implementation.
+
+Pattern semantics (paper §3.1, all variants, composable):
+
+    repeat
+        a = stencil(σ_k, f) : a          # -i: f also sees absolute indexes
+        [d = α(δ) : ⟨a_new, a_old⟩]      # -d: measure the change
+        [s = update(s, ...)]             # -s: global loop state
+    until c(/⊕ : a_or_d [, s])
+
+The whole loop lowers into a single ``jax.lax.while_loop`` — the TPU
+realisation of the paper's *device memory persistence*: the grid never
+leaves HBM, buffers are swapped by XLA, and (beyond the paper) even the
+convergence reduce + condition stay on device.
+
+Loop bodies are *done-masked* so the pattern is ``vmap``-safe: under
+``farm`` (streaming 1:1 mode) each stream item runs to its own trip count
+while vmap executes until all are done.
+
+``step`` mode generalises the stencil to an arbitrary pytree transformer —
+the k=0 map-reduce case the paper notes is subsumed — which is how the
+trainer (:mod:`repro.train.trainer`) and the decode engine
+(:mod:`repro.serve.engine`) instantiate the pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .reduce import resolve_monoid, tree_reduce
+from .semantics import Boundary
+from .stencil import stencil_taps, stencil_windows, stencil_indexed
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LoopResult:
+    """Final state of a Loop-of-stencil-reduce run (a pytree: farm/vmap-able)."""
+    a: Any                 # the converged array (or pytree in step mode)
+    reduced: jnp.ndarray   # last /⊕ value (what the condition saw)
+    iters: jnp.ndarray     # number of stencil iterations executed
+    state: Any = None      # final loop state (-s variant), None otherwise
+
+
+@dataclasses.dataclass
+class LoopOfStencilReduce:
+    """Loop-of-stencil-reduce(k, f, ⊕, c, a) with -i / -d / -s variants.
+
+    Parameters
+    ----------
+    f:        elemental function.  Signature depends on ``mode``:
+                taps    — f(get) -> array              (fast shift algebra)
+                windows — f(w) -> array                (materialised σ_k)
+                indexed — f(w, idx) -> array           (-i variant, σ̄_k)
+                step    — f(a) -> a                    (generalised map step)
+    k:        stencil radius (halo depth).  Ignored in step mode.
+    combine:  ⊕ — a monoid name ('sum','max','min','any','all','prod') or a
+              binary associative callable (then ``identity`` is required).
+    cond:     c — termination condition.  c(reduced) or c(reduced, state)
+              when ``state_init`` is given.  Loop stops when it returns True
+              (paper's repeat/until: the body always runs at least once).
+    delta:    δ — optional; switches on the -d variant: the reduce runs over
+              ``delta(a_new, a_old)`` instead of ``a_new``.
+    measure:  optional map from the post-step value to the array the reduce
+              folds (needed in step mode when ``a`` is a pytree).
+    state_init / state_update: the -s variant.  ``state_update(s, reduced_
+              input_array, it)`` runs after the stencil, before the reduce
+              feeds the condition.
+    boundary: ⊥ model at the domain edge (zero/nan/reflect/wrap).
+    max_iters: hard iteration cap (safety net; the paper's runtime has the
+              same guard in the iteration-condition plumbing).
+    unroll:   check the condition every ``unroll`` stencil applications
+              (beyond-paper optimisation: amortises the reduce+condition;
+              may overshoot convergence by < unroll iterations).
+    """
+
+    f: Callable
+    k: int = 1
+    combine: Any = "sum"
+    identity: Any = None
+    cond: Callable = None
+    mode: str = "taps"
+    delta: Optional[Callable] = None
+    measure: Optional[Callable] = None
+    state_init: Optional[Callable] = None
+    state_update: Optional[Callable] = None
+    boundary: Boundary | str = Boundary.ZERO
+    max_iters: int = 10_000
+    unroll: int = 1
+
+    def __post_init__(self):
+        self._op, self._id = resolve_monoid(self.combine, self.identity)
+        self.boundary = Boundary(self.boundary)
+        if self.cond is None:
+            raise ValueError("a termination condition c is required")
+        if self.mode not in ("taps", "windows", "indexed", "step"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+
+    # -- single stencil application ------------------------------------
+    def _apply(self, a):
+        if self.mode == "taps":
+            return stencil_taps(self.f, a, self.k, self.boundary)
+        if self.mode == "windows":
+            return stencil_windows(self.f, a, self.k, self.boundary)
+        if self.mode == "indexed":
+            return stencil_indexed(self.f, a, self.k, self.boundary)
+        return self.f(a)  # step mode
+
+    def _measure(self, a_new, a_old):
+        if self.delta is not None:
+            m = self.delta(a_new, a_old)
+        elif self.measure is not None:
+            m = self.measure(a_new)
+        else:
+            m = a_new
+        if not isinstance(m, jnp.ndarray) and not hasattr(m, "reshape"):
+            raise TypeError(
+                "reduce input must be an array; supply `measure` for pytrees")
+        return m
+
+    def _reduce(self, m):
+        return tree_reduce(self._op, m, self._id)
+
+    def _cond_value(self, r, s):
+        c = self.cond(r, s) if self.state_init is not None else self.cond(r)
+        return jnp.asarray(c, dtype=bool).reshape(())
+
+    # -- the loop --------------------------------------------------------
+    def run(self, a0, state0=None) -> LoopResult:
+        """Execute the pattern on ``a0`` (device-resident end to end)."""
+        if self.state_init is not None and state0 is None:
+            state0 = self.state_init()
+
+        def one_iter(a):
+            """unroll× stencil applications; returns (a_new, a_prev_last)."""
+            a_prev = a
+            for _ in range(self.unroll):
+                a_prev, a = a, self._apply(a)
+            return a, a_prev
+
+        def body(carry):
+            a, r, it, s, done = carry
+            a_new, a_prev = one_iter(a)
+            it_new = it + self.unroll
+            s_new = (self.state_update(s, a_new, it_new)
+                     if self.state_update is not None else s)
+            r_new = self._reduce(self._measure(a_new, a_prev))
+            done_new = self._cond_value(r_new, s_new)
+            # done-masking => vmap/farm safe
+            keep = lambda old, new: jax.tree.map(
+                lambda o, n: jnp.where(done, o, n), old, new)
+            return (keep(a, a_new), jnp.where(done, r, r_new),
+                    jnp.where(done, it, it_new), keep(s, s_new),
+                    jnp.logical_or(done, done_new))
+
+        def cond_fun(carry):
+            _, _, it, _, done = carry
+            return jnp.logical_and(~done, it < self.max_iters)
+
+        # identity element typed like the actual reduce output so the
+        # while_loop carry is type-stable (e.g. bool for the 'any' monoid)
+        r_shape = jax.eval_shape(
+            lambda a: self._reduce(self._measure(a, a)), a0)
+        r0 = jnp.asarray(self._id, dtype=r_shape.dtype)
+        carry0 = (a0, r0, jnp.asarray(0, jnp.int32), state0,
+                  jnp.asarray(False))
+        a, r, it, s, _ = jax.lax.while_loop(cond_fun, body, carry0)
+        return LoopResult(a=a, reduced=r, iters=it, state=s)
+
+    # convenience: a jitted runner
+    def jit_run(self, donate: bool = True):
+        return jax.jit(self.run, donate_argnums=(0,) if donate else ())
+
+
+# ---------------------------------------------------------------------------
+# Functional front-ends (match the paper's procedure signatures).
+# ---------------------------------------------------------------------------
+
+def loop_of_stencil_reduce(k, f, combine, c, a, *, identity=None,
+                           boundary="zero", max_iters=10_000, mode="taps",
+                           unroll=1) -> LoopResult:
+    """LOOP-OF-STENCIL-REDUCE(k, f, ⊕, c, a) — base variant."""
+    return LoopOfStencilReduce(
+        f=f, k=k, combine=combine, identity=identity, cond=c, mode=mode,
+        boundary=boundary, max_iters=max_iters, unroll=unroll).run(a)
+
+
+def loop_of_stencil_reduce_d(k, f, delta, combine, c, a, *, identity=None,
+                             boundary="zero", max_iters=10_000,
+                             mode="taps", unroll=1) -> LoopResult:
+    """-D variant: convergence measured on δ between successive iterates."""
+    return LoopOfStencilReduce(
+        f=f, k=k, combine=combine, identity=identity, cond=c, delta=delta,
+        mode=mode, boundary=boundary, max_iters=max_iters,
+        unroll=unroll).run(a)
+
+
+def loop_of_stencil_reduce_s(k, f, combine, c, a, *, init, update,
+                             identity=None, boundary="zero",
+                             max_iters=10_000, mode="taps",
+                             unroll=1) -> LoopResult:
+    """-S variant: a global state participates in the condition."""
+    return LoopOfStencilReduce(
+        f=f, k=k, combine=combine, identity=identity, cond=c,
+        state_init=init, state_update=update, mode=mode, boundary=boundary,
+        max_iters=max_iters, unroll=unroll).run(a)

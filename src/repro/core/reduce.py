@@ -1,0 +1,78 @@
+"""/(⊕) — parallel reduce, and the paper's two-phase device reduce.
+
+The paper realises reduce as "a sequence of partial GPU-side reduces,
+followed by a global host-side reduce" (§1) and fuses the first partial
+reduce into the stencil kernel (§3.3, ``stencil<SUM_kernel,MF_kernel>``).
+On TPU the same structure appears as: per-tile partials inside the Pallas
+kernel (or per-shard partials inside shard_map), then a tiny final combine —
+here :func:`tree_reduce` / :func:`two_phase_reduce` — that XLA keeps on
+device (stronger than the paper's host-side final reduce).
+"""
+from __future__ import annotations
+
+import operator
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# Named monoids usable across the codebase (op, identity).
+MONOIDS = {
+    "sum": (operator.add, 0.0),
+    "prod": (operator.mul, 1.0),
+    "max": (jnp.maximum, -jnp.inf),
+    "min": (jnp.minimum, jnp.inf),
+    "any": (jnp.logical_or, False),
+    "all": (jnp.logical_and, True),
+}
+
+
+def resolve_monoid(op, identity):
+    """Accept either a named monoid ('sum') or an (op, identity) pair."""
+    if isinstance(op, str):
+        return MONOIDS[op]
+    if identity is None:
+        raise ValueError("identity required for custom combinator")
+    return op, identity
+
+
+def tree_reduce(op: Callable, a: jnp.ndarray, identity) -> jnp.ndarray:
+    """Balanced-tree fold of the associative ⊕ over all items of ``a``.
+
+    Log-depth pairwise combine; identical result structure to the paper's
+    reduction tree and to :func:`repro.core.semantics.reduce_all`, but built
+    from O(log n) vectorised ops so XLA lowers it efficiently.
+    """
+    flat = a.reshape(-1)
+    n = flat.shape[0]
+    size = 1 if n == 0 else 1 << (n - 1).bit_length()
+    if size != n:
+        flat = jnp.concatenate(
+            [flat, jnp.full((size - n,), identity, dtype=flat.dtype)])
+    while flat.shape[0] > 1:
+        flat = op(flat[0::2], flat[1::2])
+    return flat[0]
+
+
+def two_phase_reduce(op: Callable, a: jnp.ndarray, identity,
+                     tile: int = 4096) -> jnp.ndarray:
+    """Paper's two-phase reduce: tile partials then final combine.
+
+    Phase 1 mirrors the device-side partial reduce (each tile folds
+    locally); phase 2 is the small final reduce.  Extensionally equal to
+    :func:`tree_reduce` for associative+commutative ⊕.
+    """
+    flat = a.reshape(-1)
+    n = flat.shape[0]
+    ntiles = max(1, -(-n // tile))
+    size = ntiles * tile
+    if size != n:
+        flat = jnp.concatenate(
+            [flat, jnp.full((size - n,), identity, dtype=flat.dtype)])
+    partials = flat.reshape(ntiles, tile)
+    # phase 1: per-tile fold (vectorised across tiles)
+    while partials.shape[1] > 1:
+        half = partials.shape[1] // 2
+        partials = op(partials[:, :half], partials[:, half:])
+    # phase 2: final combine of the ntiles partials
+    return tree_reduce(op, partials[:, 0], identity)

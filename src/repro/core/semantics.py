@@ -1,0 +1,170 @@
+"""Executable formal semantics of the Loop-of-stencil-reduce pattern (paper §3.1).
+
+This module is a *direct transcription* of the paper's definitions and serves as
+the oracle for property tests.  It favours clarity over speed; the production
+implementations live in :mod:`repro.core.stencil` / :mod:`repro.core.pattern`
+and are tested for extensional equality against these functions.
+
+Notation (paper §3.1):
+    α(f) : a        apply-to-all            -> :func:`apply_to_all`
+    /(⊕) : a        reduce                  -> :func:`reduce_all`
+    σ_k^n : a       stencil operator        -> :func:`neighborhoods`
+    σ̄_k^n : a       indexed stencil         -> :func:`indexed_neighborhoods`
+    stencil(σ_k,f)  = α(f) ∘ σ_k            -> :func:`stencil`
+
+The paper models out-of-range accesses with a bottom element ⊥; we realise ⊥
+as a *boundary model* (see :class:`Boundary`): the fill value the padded array
+carries outside the domain.  ``f`` and ``⊕`` must be total on that value, as
+the paper requires ("both f and ⊕ should take into account the possibility
+that some of the input arguments are ⊥").
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+class Boundary(str, enum.Enum):
+    """How σ_k realises the paper's ⊥ outside the array domain."""
+
+    ZERO = "zero"        # ⊥ := 0                (paper's Game-of-Life example)
+    NAN = "nan"          # ⊥ := NaN              (caller's f/⊕ must absorb it)
+    REFLECT = "reflect"  # ⊥ := mirrored value   (PDE Neumann-style boundary)
+    WRAP = "wrap"        # ⊥ := periodic value   (torus domains)
+
+    def pad(self, a: jnp.ndarray, k: int) -> jnp.ndarray:
+        if self is Boundary.ZERO:
+            return jnp.pad(a, k, mode="constant", constant_values=0)
+        if self is Boundary.NAN:
+            return jnp.pad(a, k, mode="constant", constant_values=jnp.nan)
+        if self is Boundary.REFLECT:
+            return jnp.pad(a, k, mode="reflect")
+        if self is Boundary.WRAP:
+            return jnp.pad(a, k, mode="wrap")
+        raise ValueError(self)
+
+
+def apply_to_all(f: Callable, a: jnp.ndarray) -> jnp.ndarray:
+    """α(f) : a  —  (α(f):a)_{i1..in} = f(a_{i1..in}).
+
+    ``f`` must be an elementwise jnp-traceable function; we apply it to the
+    whole array at once (the parallel interpretation the paper intends).
+    """
+    return f(a)
+
+
+def reduce_all(op: Callable, a: jnp.ndarray, identity) -> jnp.ndarray:
+    """/(⊕) : a  —  fold the binary associative ⊕ over *all* items.
+
+    Implemented as the paper describes a parallel reduce: a balanced reduction
+    tree, combining pairs level by level ("applications of the combinator to
+    different pairs in the reduction tree ... done independently").
+    """
+    flat = a.reshape(-1)
+    n = flat.shape[0]
+    # pad to a power of two with the identity so the tree is balanced
+    size = 1 if n == 0 else 1 << (n - 1).bit_length()
+    flat = jnp.concatenate(
+        [flat, jnp.full((size - n,), identity, dtype=flat.dtype)])
+    while flat.shape[0] > 1:
+        flat = op(flat[0::2], flat[1::2])
+    return flat[0]
+
+
+def neighborhoods(a: jnp.ndarray, k: int,
+                  boundary: Boundary | str = Boundary.ZERO) -> jnp.ndarray:
+    """σ_k^n : a  —  per-item neighbourhood tensor.
+
+    Returns ``w`` with shape ``a.shape + (2k+1,)*n`` where
+    ``w[i1..in, j1..jn] = a'[i1-k+j1, ..., in-k+jn]`` and a' extends a with
+    the boundary model (⊥).
+    """
+    boundary = Boundary(boundary)
+    n = a.ndim
+    padded = boundary.pad(a, k)
+    win = 2 * k + 1
+    tiles = []
+    for offsets in itertools.product(range(win), repeat=n):
+        sl = tuple(slice(o, o + d) for o, d in zip(offsets, a.shape))
+        tiles.append(padded[sl])
+    w = jnp.stack(tiles, axis=-1)
+    return w.reshape(a.shape + (win,) * n)
+
+
+def indexed_neighborhoods(a: jnp.ndarray, k: int,
+                          boundary: Boundary | str = Boundary.ZERO):
+    """σ̄_k^n : a  —  neighbourhoods of ⟨value, index⟩ pairs (the -i variant).
+
+    Returns ``(w, idx)`` where ``w`` is :func:`neighborhoods` and ``idx`` has
+    shape ``a.shape + (2k+1,)*n + (n,)`` holding the *absolute* coordinates
+    ``⟨i1-k+j1, ..., in-k+jn⟩`` of every window element (out-of-range indexes
+    are delivered as-is, mirroring the paper's definition; f decides).
+    """
+    n = a.ndim
+    w = neighborhoods(a, k, boundary)
+    win = 2 * k + 1
+    centres = jnp.meshgrid(*[jnp.arange(d) for d in a.shape], indexing="ij")
+    centres = jnp.stack(centres, axis=-1)            # a.shape + (n,)
+    offs = jnp.meshgrid(*[jnp.arange(-k, k + 1)] * n, indexing="ij")
+    offs = jnp.stack(offs, axis=-1)                  # (win,)*n + (n,)
+    idx = (centres.reshape(a.shape + (1,) * n + (n,))
+           + offs.reshape((1,) * n + (win,) * n + (n,)))
+    return w, idx
+
+
+def stencil(f: Callable, a: jnp.ndarray, k: int,
+            boundary: Boundary | str = Boundary.ZERO) -> jnp.ndarray:
+    """stencil(σ_k, f) : a = α(f) ∘ σ_k : a.
+
+    ``f`` consumes a window tensor of shape ``a.shape + (2k+1,)*n`` and must
+    reduce the trailing ``n`` window axes (vectorised over the leading item
+    axes) — the data-oriented elemental function of the paper.
+    """
+    return apply_to_all(f, neighborhoods(a, k, boundary))
+
+
+# ---------------------------------------------------------------------------
+# Reference (non-jit, python-loop) pattern interpreters — paper's pseudocode.
+# ---------------------------------------------------------------------------
+
+def loop_of_stencil_reduce_ref(k, f, op, c, a, *, identity,
+                               boundary=Boundary.ZERO, max_iters=1000):
+    """LOOP-OF-STENCIL-REDUCE(k, f, ⊕, c, a) — paper §3.1, base variant.
+
+    repeat a = stencil(σ_k, f): a  until c(/⊕ : a)      (do-while semantics)
+    """
+    for it in range(1, max_iters + 1):
+        a = stencil(f, a, k, boundary)
+        r = reduce_all(op, a, identity)
+        if bool(c(r)):
+            break
+    return a, r, it
+
+
+def loop_of_stencil_reduce_d_ref(k, f, delta, op, c, a, *, identity,
+                                 boundary=Boundary.ZERO, max_iters=1000):
+    """LOOP-OF-STENCIL-REDUCE-D — reduce over δ(new, old) (paper variant 2)."""
+    for it in range(1, max_iters + 1):
+        b = stencil(f, a, k, boundary)
+        d = delta(b, a)                      # α(δ) over ⟨f:a, a⟩ pairs
+        a = b                                # α(fst)
+        r = reduce_all(op, d, identity)
+        if bool(c(r)):
+            break
+    return a, r, it
+
+
+def loop_of_stencil_reduce_s_ref(k, f, op, c, a, *, identity, init, update,
+                                 boundary=Boundary.ZERO, max_iters=1000):
+    """LOOP-OF-STENCIL-REDUCE-S — global loop state in the condition."""
+    s = init()
+    for it in range(1, max_iters + 1):
+        a = stencil(f, a, k, boundary)
+        s = update(s)
+        r = reduce_all(op, a, identity)
+        if bool(c(r, s)):
+            break
+    return a, r, it, s

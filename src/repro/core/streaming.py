@@ -1,0 +1,124 @@
+"""Stream-parallel tier: pipe / farm / ofarm, and 1:1 vs 1:n deployments.
+
+The paper's two-tier model [1]: data-parallel patterns (stencil, reduce,
+Loop-of-stencil-reduce) nest inside stream-parallel ones (pipe, farm).  The
+experiments use exactly two compositions:
+
+    pipe(read, sobel, write)                       (§4.2)
+    pipe(read, detect, ofarm(restore), write)      (§4.3)
+
+JAX realisation:
+
+* ``pipe``  — function composition per item, with *async dispatch* giving
+  pipeline overlap between host-side stages (read/write) and device compute
+  (the OpenCL-events analogue).
+* ``farm``  — independent items processed concurrently.  On-device this is
+  ``vmap`` (1:1 mode: many items, one device program each lane) or batch
+  sharding over the ``data`` mesh axis (many items across devices).
+* ``ofarm`` — order-preserving farm; JAX's batched execution is
+  deterministic and order-preserving by construction, so ofarm == farm with
+  the ordering guarantee documented.
+
+Because :class:`repro.core.pattern.LoopOfStencilReduce` is done-masked, a
+farm of convergence loops is safe: each lane runs to its own trip count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def pipe(*stages: Callable) -> Callable:
+    """pipe(a, b, ...) — functional composition b∘a, per stream item."""
+    def run(x):
+        for s in stages:
+            x = s(x)
+        return x
+    return run
+
+
+def farm(worker: Callable, *, lanes_axis: int = 0) -> Callable:
+    """1:1 mode — apply ``worker`` to every item of a stacked stream batch.
+
+    ``worker`` may itself be a Loop-of-stencil-reduce ``run``; done-masking
+    makes the vmapped while_loop per-lane correct.
+    """
+    return jax.vmap(worker, in_axes=lanes_axis, out_axes=lanes_axis)
+
+
+def ofarm(worker: Callable, *, lanes_axis: int = 0) -> Callable:
+    """Order-preserving farm.  vmap is deterministic + order-preserving, so
+    this is ``farm`` with the paper's ordering contract made explicit."""
+    return farm(worker, lanes_axis=lanes_axis)
+
+
+def sharded_farm(worker: Callable, mesh: Mesh, axis: str = "data") -> Callable:
+    """Farm whose lanes are spread over a mesh axis (items across devices)."""
+    vw = jax.vmap(worker)
+
+    def run(batch):
+        sharding = NamedSharding(mesh, P(axis))
+        batch = jax.device_put(batch, sharding)
+        return jax.jit(vw)(batch)
+    return run
+
+
+@dataclasses.dataclass
+class StreamRunner:
+    """Host-side streaming driver: feeds batches of stream items through a
+    (jitted) worker with double-buffered async dispatch.
+
+    This is the runtime glue of the paper's streaming experiments: while the
+    device processes batch i, the host 'read' stage prepares batch i+1 and
+    the 'write' stage consumes batch i-1 (JAX async dispatch provides the
+    overlap; ``block_until_ready`` only at the sink).
+    """
+
+    worker: Callable                  # jitted device stage
+    source: Callable[[], Iterator]    # read stage: yields host items
+    sink: Callable[[Any], None]       # write stage: consumes results
+    batch: int = 1
+
+    def run(self) -> int:
+        it = self.source()
+        n = 0
+        inflight = None
+        while True:
+            chunk = []
+            for _ in range(self.batch):
+                try:
+                    chunk.append(next(it))
+                except StopIteration:
+                    break
+            if not chunk and inflight is None:
+                break
+            nxt = None
+            if chunk:
+                stacked = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *chunk) if len(chunk) > 1 \
+                    else jax.tree.map(lambda x: jnp.asarray(x)[None], chunk[0])
+                nxt = self.worker(stacked)   # async dispatch
+            if inflight is not None:
+                for item in _unstack(inflight):
+                    self.sink(item)
+                    n += 1
+            inflight = nxt
+            if not chunk:
+                break
+        if inflight is not None:
+            for item in _unstack(inflight):
+                self.sink(item)
+                n += 1
+        return n
+
+
+def _unstack(batched):
+    leaves = jax.tree.leaves(batched)
+    if not leaves:
+        return []
+    b = leaves[0].shape[0]
+    return [jax.tree.map(lambda x: x[i], batched) for i in range(b)]

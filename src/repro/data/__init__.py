@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, Prefetcher, shard_batch
+
+__all__ = ["SyntheticLM", "Prefetcher", "shard_batch"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: the fused
+stencil + partial-reduce sweep (§3.3), plus the sliding-window flash
+attention kernel used by the sequence-stencil layers of the LM stack.
+
+Every kernel ships with a pure-jnp oracle in :mod:`repro.kernels.ref` and a
+jit'd public wrapper in :mod:`repro.kernels.ops`; tests sweep shapes/dtypes
+and assert allclose in interpret mode (this container is CPU-only; TPU is
+the target).
+"""
+from .stencil2d import stencil2d_fused, KernelTaps
+from . import ops, ref
+
+__all__ = ["stencil2d_fused", "KernelTaps", "ops", "ref"]

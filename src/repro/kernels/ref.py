@@ -1,0 +1,157 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are built on :mod:`repro.core.stencil` — which is itself
+property-tested against the executable formal semantics — so the kernel
+tests close the loop: Pallas kernel ≡ core stencil ≡ paper semantics.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reduce import resolve_monoid, tree_reduce
+from repro.core.stencil import TapAccessor, stencil_taps
+from repro.core.semantics import Boundary
+
+
+def stencil2d_fused_ref(a, f, *, env=(), k=1, combine="sum", identity=None,
+                        measure: Optional[Callable] = None,
+                        boundary="zero", acc_dtype=jnp.float32):
+    """Oracle for :func:`repro.kernels.stencil2d.stencil2d_fused`."""
+    op, ident = resolve_monoid(combine, identity)
+    new = stencil_taps(lambda get: f(get, *env), a, k, boundary)
+    meas = measure(new, a) if measure is not None else new
+    red = tree_reduce(op, meas.astype(acc_dtype), ident)
+    return new, red
+
+
+# ---------------------------------------------------------------------------
+# Application elemental functions (shared by kernels, refs, and the apps).
+# Taps-style (paper's data-oriented elemental-function protocol).
+# ---------------------------------------------------------------------------
+
+def jacobi_taps(rhs_scale: float = 0.25):
+    """Jacobi sweep for the Helmholtz/Laplace problem: 4-point average."""
+    def f(get):
+        return rhs_scale * (get(-1, 0) + get(1, 0) + get(0, -1) + get(0, 1))
+    return f
+
+
+def helmholtz_jacobi_taps(alpha: float, dx: float):
+    """Jacobi iteration for (∇² - α)u = -f on a uniform grid.
+
+    u' = (dx²·f + Σ_4-neighbours u) / (4 + α·dx²)
+    The forcing field enters through the kernel's ``env`` — the paper's
+    read-only input matrix combined with the partial-solution's 3×3
+    neighbourhood (§4.1, and Fig. 2's ``(input, env)`` schema).
+    """
+    denom = 4.0 + alpha * dx * dx
+
+    def f(get, fxy):
+        s = get(-1, 0) + get(1, 0) + get(0, -1) + get(0, 1)
+        return (dx * dx * fxy + s) / denom
+    return f
+
+
+def sobel_taps():
+    """Sobel edge detector: gradient magnitude of the 3×3 neighbourhood."""
+    def f(get, *_):
+        gx = (get(-1, 1) + 2 * get(0, 1) + get(1, 1)
+              - get(-1, -1) - 2 * get(0, -1) - get(1, -1))
+        gy = (get(1, -1) + 2 * get(1, 0) + get(1, 1)
+              - get(-1, -1) - 2 * get(-1, 0) - get(-1, 1))
+        return jnp.sqrt(gx * gx + gy * gy)
+    return f
+
+
+def gol_taps():
+    """Conway's Game of Life (the paper's running example, Fig. 1)."""
+    def f(get, *_):
+        n = sum(get(di, dj) for di in (-1, 0, 1) for dj in (-1, 0, 1)
+                if (di, dj) != (0, 0))
+        return jnp.where((n == 3) | ((get(0, 0) > 0) & (n == 2)), 1.0, 0.0)
+    return f
+
+
+def median3_taps():
+    """3×3 median (detection phase of the video-restoration app, §4.3)."""
+    def f(get, *_):
+        w = jnp.stack([get(di, dj) for di in (-1, 0, 1) for dj in (-1, 0, 1)])
+        return jnp.sort(w, axis=0)[4]
+    return f
+
+
+def amf_detect_taps(kmax: int = 3):
+    """Adaptive median filter detection (§4.3 phase 1, after [5]).
+
+    The classic AMF escalates the window 3×3 → 5×5 → 7×7 ("dynamic stencil
+    with reasonable static bounds", paper §3.2): at each level, if the
+    window median is strictly between the window min/max the decision is
+    made there — the pixel is noise iff it equals a window extreme;
+    otherwise the window grows.  Pixels undecided at kmax are flagged.
+
+    Returns a taps function emitting ``select`` of the decision:
+    ``what='mask'`` → 1.0 where noise, ``what='repl'`` → median replacement.
+    (Two planes, two sweeps; the detection runs once per frame.)
+    """
+    def core(get):
+        x = get(0, 0)
+        decided = jnp.zeros_like(x, dtype=bool)
+        noise = jnp.zeros_like(x, dtype=bool)
+        repl = x
+        for k in range(1, kmax + 1):
+            w = jnp.stack([get(di, dj)
+                           for di in range(-k, k + 1)
+                           for dj in range(-k, k + 1)])
+            srt = jnp.sort(w, axis=0)
+            mn, med, mx = srt[0], srt[w.shape[0] // 2], srt[-1]
+            level_a = (med > mn) & (med < mx)
+            is_noise_here = ~((x > mn) & (x < mx))
+            newly = level_a & ~decided
+            noise = jnp.where(newly, is_noise_here, noise)
+            repl = jnp.where(newly & is_noise_here, med, repl)
+            decided = decided | level_a
+        noise = jnp.where(decided, noise, True)
+        repl = jnp.where(~decided, med, repl)  # last-level median fallback
+        return noise.astype(x.dtype), repl
+
+    def f_mask(get, *_):
+        return core(get)[0]
+
+    def f_repl(get, *_):
+        return core(get)[1]
+    return f_mask, f_repl
+
+
+def restore_taps(beta: float = 2.0):
+    """Regularisation sweep of the two-phase restoration (§4.3).
+
+    Pixels flagged noisy (mask=1) move toward a weighted combination of the
+    4-neighbourhood median and mean (edge-preserving smoothing functional
+    minimisation, as in [5]); clean pixels are pinned to the observation.
+    ``env = (noisy_observation, noise_mask)``.
+    """
+    def f(get, noisy, mask):
+        nb = jnp.stack([get(-1, 0), get(1, 0), get(0, -1), get(0, 1)])
+        med = jnp.sort(nb, axis=0)
+        med4 = 0.5 * (med[1] + med[2])
+        mean4 = jnp.mean(nb, axis=0)
+        prop = (beta * med4 + mean4) / (beta + 1.0)
+        return jnp.where(mask > 0, prop, noisy)
+    return f
+
+
+def heat_taps(nu: float = 0.1):
+    """Explicit heat equation step (generic iterative stencil for tests)."""
+    def f(get, *_):
+        lap = (get(-1, 0) + get(1, 0) + get(0, -1) + get(0, 1)
+               - 4.0 * get(0, 0))
+        return get(0, 0) + nu * lap
+    return f
+
+
+def abs_delta(new, old):
+    """The -d variant's δ for convergence-on-change monitoring."""
+    return jnp.abs(new - old)

@@ -1,0 +1,132 @@
+"""Sliding-window flash attention Pallas kernel (sequence-stencil).
+
+The LM-side hot-spot where the paper's stencil insight applies 1-D: a
+local attention layer is a one-sided causal stencil of radius ``window``
+along the sequence.  Flash-style online softmax over kv blocks:
+
+* grid (B·H, S/bq, S/bk) — the kv axis is the innermost (sequential on
+  TPU) dimension; running (m, l, acc) live in VMEM scratch and reset at
+  the first kv block of every q row;
+* blocks outside the stencil (kv ahead of q, or behind the window) are
+  masked at element level and their DMAs skipped at block level via the
+  index map (the block never moves when fully out of range — the tile is
+  re-read but ignored, keeping the spec static);
+* bq = bk = 128 (MXU-aligned), accumulation fp32.
+
+Oracle: :func:`repro.kernels.ref_swa.swa_attention_ref`; tests sweep
+shapes/windows/causal in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                bq, bk, nk, window, causal, scale, softcap):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= k_pos > q_pos - window
+
+    # block-level early out: fully-masked kv blocks skip all compute
+    @pl.when(jnp.any(ok))
+    def _():
+        q = q_ref[0].astype(jnp.float32) * scale         # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, hd)
+        s = q @ k.T                                      # (bq, bk)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                           # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_ref[...] + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha \
+            + p @ v_ref[0].astype(jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def swa_attention(q, k, v, *, window: int = 0, causal: bool = True,
+                  block_q: int = 128, block_k: int = 128,
+                  softcap: float = 0.0, interpret: bool = False):
+    """Flash sliding-window attention with native GQA.
+
+    q: (B·H, S, hd); k, v: (B·KH, S, hd).  The kv BlockSpec index map
+    folds the query head onto its kv group (``b // G``) — grouped keys
+    are never materialised per-head.  Returns (B·H, S, hd).
+    """
+    BH, S, hd = q.shape
+    BKH = k.shape[0]
+    assert BH % BKH == 0, "q heads must be a multiple of kv heads"
+    G = BH // BKH
+    bq, bk = min(block_q, S), min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, "S must tile"
+    nq, nk = S // bq, S // bk
+    scale = float(1.0 / np.sqrt(hd))
+
+    kernel = functools.partial(
+        _swa_kernel, bq=bq, bk=bk, nk=nk, window=window, causal=causal,
+        scale=scale, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b // G, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),     # running sum l
+            pltpu.VMEM((bq, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def swa_attention_ref(q, k, v, *, window: int = 0, causal: bool = True):
+    """Pure-jnp oracle: masked softmax attention."""
+    BH, S, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= kp <= qp
+    if window:
+        ok &= kp > qp - window
+    s = jnp.where(ok[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)) \
+        .astype(q.dtype)

@@ -1,0 +1,313 @@
+"""Dry-run cells: (architecture × input shape) → a lowerable step.
+
+Each cell supplies:
+    fn               — the step function (train_step / prefill_step /
+                       decode_step)
+    args             — ShapeDtypeStruct stand-ins (weak-type-correct,
+                       shardable, **no device allocation**)
+    in/out_shardings — NamedShardings against the target mesh
+    donate           — realistic buffer donation (params+opt for train,
+                       caches for decode)
+
+Shapes (assignment):
+    train_4k     seq 4,096   global_batch 256   (train_step)
+    prefill_32k  seq 32,768  global_batch 32    (serve prefill)
+    decode_32k   cache 32,768 batch 128         (serve_step, 1 new token)
+    long_500k    cache 524,288 batch 1          (serve_step; sub-quadratic
+                                                 archs only — see skips)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.optim import AdamW
+from repro.sharding import specs as SH
+from repro.train.objective import grad_accum_step, lm_loss
+
+
+@dataclasses.dataclass
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def skip_reason(cfg: ArchConfig, shape: str) -> Optional[str]:
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention arch: 500k decode requires "
+                "sub-quadratic attention (DESIGN.md §Arch-applicability)")
+    return None
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def pick_accum(cfg: ArchConfig, shape: ShapeCell, mesh: Mesh) -> int:
+    """Grad-accum depth: keep the per-device microbatch ≈ 1–2 sequences
+    for wide models (remat keeps one unit's activations live)."""
+    dp = int(np.prod([SH.mesh_size(mesh, a) for a in SH.dp_axes(mesh)]))
+    per_dev = max(1, shape.batch // dp)
+    target = 1 if cfg.d_model >= 3584 else 2
+    accum = max(1, per_dev // target)
+    while shape.batch % (accum) or (shape.batch // accum) % dp:
+        accum //= 2
+        if accum <= 1:
+            return 1
+    return accum
+
+
+def _text_len(cfg: ArchConfig, seq: int) -> int:
+    return seq - (cfg.vision_patches or 0)
+
+
+def install_sharding_hook(cfg: ArchConfig, mesh: Mesh,
+                          moe_parallel: bool = True):
+    """Launcher-side parallelism policies:
+
+    * context-parallel attention — activations enter attention sharded on
+      the sequence over the 'model' axis (weights replicated); enabled
+      per-arch via ``cfg.attn_sequence_parallel`` (head counts not
+      divisible by tp);
+    * explicit expert-parallel MoE dispatch (shard_map, one psum/layer) —
+      replaces the GSPMD-auto scatter that all-gathers the dispatch
+      buffer (§Perf hillclimb, qwen3-moe/jamba).
+    """
+    if cfg.n_experts and moe_parallel and SH.mesh_size(mesh, "model") > 1 \
+            and cfg.n_experts % SH.mesh_size(mesh, "model") == 0:
+        import functools
+        from repro.models.moe_parallel import expert_parallel_moe
+        T.set_moe_parallel(functools.partial(
+            expert_parallel_moe, mesh=mesh, dp_axes=SH.dp_axes(mesh)))
+    else:
+        T.set_moe_parallel(None)
+    if not cfg.attn_sequence_parallel:
+        T.set_sharding_hook(None)
+        return
+    dp = SH.dp_axes(mesh)
+    tp = SH.mesh_size(mesh, "model")
+    batch = NamedSharding(mesh, P(dp if dp else None, None, None))
+    seq = NamedSharding(mesh, P(dp if dp else None, "model", None))
+
+    def hook(tag, x):
+        if x.ndim != 3:
+            return x
+        if tag == "attn_in" and x.shape[1] % tp == 0 and x.shape[1] >= tp:
+            return jax.lax.with_sharding_constraint(x, seq)
+        if tag == "attn_out" and x.shape[1] > 1:
+            return jax.lax.with_sharding_constraint(x, batch)
+        return x
+    T.set_sharding_hook(hook)
+
+
+# ---------------------------------------------------------------------------
+# cell builders
+# ---------------------------------------------------------------------------
+
+def build_train_cell(cfg: ArchConfig, shape: ShapeCell, mesh: Mesh,
+                     optimizer: Optional[AdamW] = None):
+    install_sharding_hook(cfg, mesh)
+    opt = optimizer or AdamW(lr=3e-4, weight_decay=0.1)
+    accum = pick_accum(cfg, shape, mesh)
+
+    p_shape = jax.eval_shape(
+        lambda k: T.init_params(cfg, k, max_position=shape.seq),
+        jax.random.PRNGKey(0))
+    o_shape = jax.eval_shape(opt.init, p_shape)
+    p_shard = SH.params_shardings(cfg, p_shape, mesh)
+    o_shard = SH.opt_shardings(cfg, o_shape, mesh)
+
+    bspec = SH.batch_spec(mesh, shape.batch)
+    bshard = NamedSharding(mesh, bspec)
+    S_text = _text_len(cfg, shape.seq)
+    batch = {"tokens": _sds((shape.batch, S_text), jnp.int32, bshard),
+             "labels": _sds((shape.batch, S_text), jnp.int32, bshard)}
+    b_shard = {"tokens": bshard, "labels": bshard}
+    if cfg.is_encoder_decoder:
+        fshard = NamedSharding(mesh, SH.batch_spec(mesh, shape.batch, 3))
+        batch["frames"] = _sds((shape.batch, cfg.encoder_seq, cfg.d_model),
+                               jnp.bfloat16, fshard)
+        b_shard["frames"] = fshard
+    if cfg.vision_patches:
+        pshard = NamedSharding(mesh, SH.batch_spec(mesh, shape.batch, 3))
+        batch["patch_embeds"] = _sds(
+            (shape.batch, cfg.vision_patches, cfg.vision_embed_dim),
+            jnp.bfloat16, pshard)
+        b_shard["patch_embeds"] = pshard
+
+    def train_step(params, opt_state, bt):
+        grads, loss, metrics = grad_accum_step(cfg, params, bt,
+                                               accum=accum)
+        params, opt_state, stats = opt.update(grads, opt_state, params)
+        return params, opt_state, dict(metrics, **stats)
+
+    rep = SH.replicated(mesh)
+    met_shape = jax.eval_shape(train_step, p_shape, o_shape, batch)[2]
+    met_shard = jax.tree.map(lambda _: rep, met_shape)
+    jfn = jax.jit(train_step,
+                  in_shardings=(p_shard, o_shard, b_shard),
+                  out_shardings=(p_shard, o_shard, met_shard),
+                  donate_argnums=(0, 1))
+    return jfn, (p_shape, o_shape, batch), {"accum": accum}
+
+
+def build_prefill_cell(cfg: ArchConfig, shape: ShapeCell, mesh: Mesh):
+    install_sharding_hook(cfg, mesh)
+    p_shape = jax.eval_shape(
+        lambda k: T.init_params(cfg, k, max_position=shape.seq),
+        jax.random.PRNGKey(0))
+    p_shard = SH.params_shardings(cfg, p_shape, mesh)
+    bshard = NamedSharding(mesh, SH.batch_spec(mesh, shape.batch))
+    S_text = _text_len(cfg, shape.seq)
+    args = {"tokens": _sds((shape.batch, S_text), jnp.int32, bshard)}
+    a_shard = {"tokens": bshard}
+    if cfg.is_encoder_decoder:
+        fshard = NamedSharding(mesh, SH.batch_spec(mesh, shape.batch, 3))
+        args["frames"] = _sds((shape.batch, cfg.encoder_seq, cfg.d_model),
+                              jnp.bfloat16, fshard)
+        a_shard["frames"] = fshard
+    if cfg.vision_patches:
+        pshard = NamedSharding(mesh, SH.batch_spec(mesh, shape.batch, 3))
+        args["patch_embeds"] = _sds(
+            (shape.batch, cfg.vision_patches, cfg.vision_embed_dim),
+            jnp.bfloat16, pshard)
+        a_shard["patch_embeds"] = pshard
+
+    c_shape = jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.batch, shape.seq))
+    c_shard = SH.cache_shardings(cfg, c_shape, mesh, shape.batch)
+
+    def prefill_step(params, a):
+        caches = T.init_cache(cfg, shape.batch, shape.seq)
+        enc_out = cross = None
+        if cfg.is_encoder_decoder:
+            enc_out = T.encode(cfg, params, a["frames"])
+            cross = T.prefill_cross_caches(cfg, params, enc_out)
+        logits, caches = T.step_with_cache(
+            cfg, params, caches, a["tokens"], 0,
+            patch_embeds=a.get("patch_embeds"), enc_out=enc_out,
+            cross_caches=cross)
+        return logits[:, -1], caches
+
+    logit_shard = NamedSharding(mesh, SH.batch_spec(mesh, shape.batch))
+    jfn = jax.jit(prefill_step,
+                  in_shardings=(p_shard, a_shard),
+                  out_shardings=(logit_shard, c_shard))
+    return jfn, (p_shape, args), {}
+
+
+def build_decode_cell(cfg: ArchConfig, shape: ShapeCell, mesh: Mesh,
+                      cache_quant: bool = False):
+    install_sharding_hook(cfg, mesh)
+    p_shape = jax.eval_shape(
+        lambda k: T.init_params(cfg, k, max_position=shape.seq),
+        jax.random.PRNGKey(0))
+    p_shard = SH.params_shardings(cfg, p_shape, mesh)
+    c_shape = jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.batch, shape.seq,
+                             quant=cache_quant))
+    c_shard = SH.cache_shardings(cfg, c_shape, mesh, shape.batch)
+    bshard = NamedSharding(mesh, SH.batch_spec(mesh, shape.batch))
+    rep = SH.replicated(mesh)
+
+    args = {"tokens": _sds((shape.batch, 1), jnp.int32, bshard),
+            "pos": _sds((), jnp.int32, rep)}
+    a_shard = {"tokens": bshard, "pos": rep}
+    extra = {}
+    if cfg.is_encoder_decoder:
+        eshard = NamedSharding(mesh, SH.batch_spec(mesh, shape.batch, 3))
+        extra["enc_out"] = _sds(
+            (shape.batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16,
+            eshard)
+        x_shape = jax.eval_shape(
+            lambda p, e: T.prefill_cross_caches(cfg, p, e),
+            p_shape, extra["enc_out"])
+        x_shard = SH.cache_shardings(cfg, x_shape, mesh, shape.batch,
+                                     seq_shard=False)
+        extra_shard = {"enc_out": eshard, "cross": x_shard}
+        extra["cross"] = x_shape
+    else:
+        extra_shard = {}
+
+    def decode_step(params, caches, a, ex):
+        logits, caches = T.decode_step(
+            cfg, params, caches, a["tokens"], a["pos"],
+            enc_out=ex.get("enc_out"), cross_caches=ex.get("cross"))
+        return logits, caches
+
+    jfn = jax.jit(decode_step,
+                  in_shardings=(p_shard, c_shard, a_shard, extra_shard),
+                  out_shardings=(NamedSharding(mesh, SH.batch_spec(
+                      mesh, shape.batch, 3)), c_shard),
+                  donate_argnums=(1,))
+    return jfn, (p_shape, c_shape, args, extra), {}
+
+
+def build_cell(cfg: ArchConfig, shape_name: str, mesh: Mesh, **kw):
+    """Returns (jitted_fn, example_args, meta) or raises on skip."""
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        raise CellSkipped(reason)
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh)
+    return build_decode_cell(cfg, shape, mesh, **kw)
+
+
+class CellSkipped(Exception):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs (for the roofline's usefulness ratio)
+# ---------------------------------------------------------------------------
+
+def count_params(shapes) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+
+
+def active_params(cfg: ArchConfig, shapes) -> int:
+    """Active parameters per token (MoE: top_k of n_experts routed)."""
+    total = count_params(shapes)
+    if not cfg.n_experts:
+        return total
+    routed = 0
+    def visit(kp, leaf):
+        nonlocal routed
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        if any(w in path for w in ("w_up", "w_gate", "w_down")):
+            routed += int(np.prod(leaf.shape))
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, shapes)
+    return total - routed + int(routed * cfg.top_k / cfg.n_experts)
+
+
+def model_flops(cfg: ArchConfig, shape_name: str, shapes) -> float:
+    """6·N_active·D for train; 2·N_active per generated token for decode;
+    2·N_active·D for prefill (forward only)."""
+    sh = SHAPES[shape_name]
+    n_act = active_params(cfg, shapes)
+    tokens = sh.batch * (sh.seq if sh.kind != "decode" else 1)
+    mult = 6 if sh.kind == "train" else 2
+    return float(mult) * n_act * tokens

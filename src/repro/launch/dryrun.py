@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^^ MUST precede every other import: jax locks the device count at first
+# initialisation.  The dry-run (and only the dry-run) builds the
+# production meshes out of 512 host placeholder devices.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture × input shape × mesh) cell:
+    jit(step).lower(**ShapeDtypeStructs)  →  .compile()
+    → memory_analysis()                      (proves it fits)
+    → cost_analysis() + HLO analyzer         (FLOPs / bytes / collectives,
+                                              while-trip-corrected)
+    → roofline terms                         (EXPERIMENTS.md §Roofline)
+
+Artifacts: one JSON per cell under --out (incremental: finished cells are
+skipped on re-run, so the 70+-compile sweep is restartable — the same
+fault-tolerance posture the trainer has).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh pod
+    python -m repro.launch.dryrun --all [--mesh both] [--out runs/dryrun]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
+             force: bool = False, verbose: bool = True,
+             pod_shape=None, remat_policy=None,
+             cache_quant: bool = False) -> dict:
+    from repro.configs import get_config
+    from repro.launch import cells as C
+    from repro.launch import hlo_analysis as HA
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import Roofline
+
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape}__{mesh_kind}"
+    if pod_shape:
+        tag += f"_{pod_shape[0]}x{pod_shape[1]}"
+    if remat_policy:
+        tag += f"_{remat_policy}"
+    if cache_quant:
+        tag += "_int8kv"
+    tag = tag.replace("/", "_")
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    if remat_policy:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, remat_policy=remat_policy)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"),
+                                pod_shape=pod_shape)
+    chips = int(np.prod(list(mesh.shape.values())))
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "chips": chips,
+           "ok": False}
+    t0 = time.time()
+    try:
+        reason = C.skip_reason(cfg, shape)
+        if reason:
+            rec.update(skipped=True, reason=reason, ok=True)
+            _write(path, rec)
+            if verbose:
+                print(f"[dryrun] {tag}: SKIP ({reason.split(':')[0]})")
+            return rec
+
+        kw = {"cache_quant": True} if (
+            cache_quant and C.SHAPES[shape].kind == "decode") else {}
+        jfn, args, meta = C.build_cell(cfg, shape, mesh, **kw)
+        with mesh:
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        # ---- memory analysis (proves fit) -------------------------------
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                v = getattr(ma, k, None)
+                if v is not None:
+                    mem[k] = int(v)
+        except Exception as e:        # pragma: no cover
+            mem["error"] = str(e)
+        # analytic per-device argument bytes from the shardings (exact)
+        arg_bytes = _sharded_arg_bytes(args, mesh)
+        mem["analytic_args_bytes_per_device"] = int(arg_bytes)
+
+        # ---- cost analysis ----------------------------------------------
+        ca = {}
+        try:
+            d = compiled.cost_analysis()
+            ca = {k: float(d[k]) for k in ("flops", "bytes accessed")
+                  if k in d}
+        except Exception as e:        # pragma: no cover
+            ca = {"error": str(e)}
+
+        hlo = compiled.as_text()
+        costs = HA.analyze(hlo, n_partitions=chips)
+        model_fl = C.model_flops(cfg, shape, args[0])
+        rf = Roofline(
+            arch=arch, shape=shape, mesh=mesh_kind, chips=chips,
+            flops_per_device=costs.flops,
+            bytes_per_device=costs.bytes_accessed,
+            collective_bytes_per_device=costs.collective_bytes,
+            model_flops_global=model_fl).finalize()
+
+        rec.update(
+            ok=True, skipped=False, meta=meta,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory=mem, xla_cost=ca,
+            analyzer={
+                "flops_per_device": costs.flops,
+                "bytes_per_device": costs.bytes_accessed,
+                "collective_bytes_per_device": costs.collective_bytes,
+                "per_collective": dict(costs.per_collective),
+                "collective_count": dict(costs.collective_count),
+                "trip_counts": dict(costs.trip_counts),
+            },
+            model_flops=model_fl,
+            params=C.count_params(args[0]),
+            active_params=C.active_params(cfg, args[0]),
+            roofline=rf.asdict(),
+            hlo_bytes=len(hlo),
+        )
+        if verbose:
+            print(f"[dryrun] {tag}: OK compile={t_compile:.0f}s "
+                  f"{rf.row()}", flush=True)
+    except Exception as e:
+        rec.update(error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[dryrun] {tag}: FAIL {type(e).__name__}: "
+                  f"{str(e)[:300]}", flush=True)
+    _write(path, rec)
+    return rec
+
+
+def _sharded_arg_bytes(args, mesh) -> float:
+    total = 0.0
+    for leaf in jax.tree.leaves(args):
+        n = float(np.prod(leaf.shape)) if leaf.shape else 1.0
+        bts = n * leaf.dtype.itemsize
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None and hasattr(sh, "spec"):
+            denom = 1
+            for entry in sh.spec:
+                for ax in ((entry,) if isinstance(entry, str)
+                           else (entry or ())):
+                    denom *= mesh.shape[ax]
+            bts /= denom
+        total += bts
+    return total
+
+
+def _write(path, rec):
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+
+
+def main(argv=None):
+    from repro.configs import ALL_ARCHS
+    from repro.launch.cells import SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--pod-shape", default=None,
+                    help="override (data,model) factorisation, e.g. 32,8")
+    ap.add_argument("--remat-policy", default=None,
+                    choices=["full", "block_outs"])
+    ap.add_argument("--cache-int8", action="store_true",
+                    help="int8-quantised KV caches for decode cells")
+    args = ap.parse_args(argv)
+    pod_shape = (tuple(int(x) for x in args.pod_shape.split(","))
+                 if args.pod_shape else None)
+
+    meshes = (["pod", "multipod"] if args.mesh == "both" else [args.mesh])
+    archs = ALL_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    results = []
+    for mk in meshes:
+        for arch in archs:
+            for shape in shapes:
+                results.append(run_cell(arch, shape, mk, args.out,
+                                        force=args.force,
+                                        pod_shape=pod_shape,
+                                        remat_policy=args.remat_policy,
+                                        cache_quant=args.cache_int8))
+    ok = sum(1 for r in results if r.get("ok"))
+    skipped = sum(1 for r in results if r.get("skipped"))
+    print(f"[dryrun] {ok}/{len(results)} ok ({skipped} documented skips), "
+          f"{len(results) - ok} failed")
+    return 0 if ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

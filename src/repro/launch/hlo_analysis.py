@@ -1,0 +1,382 @@
+"""Static HLO analyzer: FLOPs / bytes / collective traffic with correct
+while-loop trip multipliers.
+
+Why not ``compiled.cost_analysis()`` alone?  XLA's cost analysis visits a
+while body ONCE, so anything under ``lax.scan`` (all our models scan their
+layer stack; grad-accum scans microbatches) is undercounted by the trip
+count.  This analyzer parses the optimized HLO text, builds the
+computation call graph, extracts counted-loop trip counts from the loop
+condition's comparison constant, and multiplies every instruction's cost
+by the product of enclosing trip counts.
+
+Costs extracted per instruction:
+    dot            2 · |output| · contracted_size        (FLOPs)
+    collectives    wire bytes with ring-algorithm factors per op type and
+                   the replica-group size parsed from the op
+    fusion/dot/... boundary bytes (operands + output) for the memory term
+                   (matches XLA's own "bytes accessed" convention)
+
+Validated against cost_analysis on loop-free modules (tests) and against
+analytic 6·N·D for the LM cells (EXPERIMENTS.md table column).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(r"(?:body|condition|to_apply|calls)=%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parse_shapes(type_str: str):
+    """All (dtype, dims) tensors in a type string (handles tuples)."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = [int(d) for d in dims.split(",") if d] if dims else []
+        out.append((dt, shape))
+    return out
+
+
+def tensor_bytes(type_str: str) -> int:
+    total = 0
+    for dt, shape in parse_shapes(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    out_type: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    params: Dict[str, str]          # param name -> type string
+    symbols: Dict[str, str]         # instr name -> output type string
+
+
+def split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    header = re.compile(
+        r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$")
+    comment = re.compile(r"/\*.*?\*/")
+    for raw in hlo.splitlines():
+        line = comment.sub("", raw.rstrip())
+        h = header.match(line)
+        if h and ("=" not in line.split("(")[0]):
+            params = {}
+            for pm in re.finditer(r"([\w.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                  h.group(2)):
+                params[pm.group(1)] = pm.group(2)
+            cur = Computation(h.group(1), [], params, dict(params))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # "TYPE op(...)" — op is the first word after the type annotation
+        om = re.match(r"((?:\([^=]*?\))|(?:[\w\[\],{}]+))\s+([\w\-]+)\(",
+                      rest)
+        if om:
+            out_type, op = om.group(1), om.group(2)
+        else:
+            out_type, op = rest, "constant"
+        cur.instrs.append(Instr(name, op, out_type, line))
+        cur.symbols[name] = out_type
+    return comps
+
+
+def loop_trip_count(cond: Computation) -> int:
+    """Counted loops compare the induction var against a constant; take the
+    largest scalar integer constant in the condition computation."""
+    best = 1
+    for ins in cond.instrs:
+        cm = re.search(r"constant\((\d+)\)", ins.line)
+        if cm and re.match(r"[su]\d+\[\]", ins.out_type.strip("%( ")):
+            best = max(best, int(cm.group(1)))
+        elif cm and ins.op == "constant":
+            best = max(best, int(cm.group(1)))
+    return best
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out = parse_shapes(ins.out_type)
+    if not out:
+        return 0.0
+    out_elems = 1
+    for d in out[0][1]:
+        out_elems *= d
+    # contracted size from the lhs operand's shape
+    ops = re.search(r"\bdot\(([^)]*)\)", ins.line)
+    lm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    if not ops or not lm:
+        return 2.0 * out_elems      # degenerate
+    lhs_name = ops.group(1).split(",")[0].strip().lstrip("%")
+    lhs_type = comp.symbols.get(lhs_name, "")
+    lhs_shapes = parse_shapes(lhs_type)
+    if not lhs_shapes:
+        return 2.0 * out_elems
+    lhs_dims = lhs_shapes[0][1]
+    contracted = 1
+    for idx in [int(i) for i in lm.group(1).split(",") if i]:
+        if idx < len(lhs_dims):
+            contracted *= lhs_dims[idx]
+    return 2.0 * out_elems * contracted
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].split("{")[-1]
+        ids = [x for x in first.split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    return default
+
+
+def _collective_wire_bytes(ins: Instr, comp: Computation,
+                           n_default: int) -> float:
+    """Ring-algorithm wire bytes per participating device."""
+    n = max(2, _group_size(ins.line, n_default))
+    out_b = tensor_bytes(ins.out_type)
+    if ins.op == "all-reduce":
+        return 2.0 * out_b * (n - 1) / n
+    if ins.op == "all-gather":
+        return out_b * (n - 1) / n
+    if ins.op == "reduce-scatter":
+        return out_b * (n - 1)          # input = out·n; wire = in·(n-1)/n
+    if ins.op == "all-to-all":
+        return out_b * (n - 1) / n
+    if ins.op == "collective-permute":
+        return out_b
+    return 0.0
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> int:
+    ops = re.search(r"\w+\((.*)\)", ins.line)
+    if not ops:
+        return 0
+    total = 0
+    for tok in ops.group(1).split(","):
+        nm = tok.strip().lstrip("%")
+        if nm in comp.symbols:
+            total += tensor_bytes(comp.symbols[nm])
+    return total
+
+
+def _operand_bytes_list(ins: Instr, comp: Computation):
+    ops = re.search(r"[\w\-]+\((.*)\)", ins.line)
+    if not ops:
+        return []
+    out = []
+    for tok in ops.group(1).split(","):
+        nm = tok.strip().lstrip("%")
+        if nm in comp.symbols:
+            out.append(tensor_bytes(comp.symbols[nm]))
+    return out
+
+
+def _mem_bytes(ins: Instr, comp: Computation, comps, fusion_roots) -> float:
+    """HBM traffic estimate for one top-level instruction.
+
+    In-place-able ops are the big correction vs naive operand+output
+    counting: a dynamic-update-slice in a loop writes only the slice (XLA
+    aliases the buffer), and a dynamic-slice reads only the slice.  This
+    matters enormously for scan-stacked caches/remat buffers.
+    """
+    out_b = tensor_bytes(ins.out_type)
+    opnds = _operand_bytes_list(ins, comp)
+
+    def dus_bytes(root_ins, root_comp):
+        ops = _operand_bytes_list(root_ins, root_comp)
+        upd = ops[1] if len(ops) > 1 else 0
+        return 2.0 * upd                     # read-modify-write the slice
+
+    if ins.op == "dynamic-update-slice":
+        return dus_bytes(ins, comp)
+    if ins.op == "dynamic-slice":
+        return 2.0 * out_b                   # read + write the slice
+    if ins.op == "fusion":
+        m = re.search(r"calls=%([\w.\-]+)", ins.line)
+        sub = comps.get(m.group(1)) if m else None
+        if sub is not None and sub.instrs:
+            return _fusion_mem_bytes(ins, sub)
+    return out_b + sum(opnds)
+
+
+def _fusion_mem_bytes(ins: Instr, sub: Computation) -> float:
+    """Effective HBM traffic of a fusion call.
+
+    Fusion-body params accessed only through a dynamic-slice cost the
+    slice, not the full operand (scan xs!); a dynamic-update-slice root
+    writes only the update (scan ys / cache write, aliased in place)."""
+    # params that are sliced inside, and the slice sizes
+    sliced: Dict[str, int] = {}
+    dus_target = None
+    dus_update = 0
+    for fi in sub.instrs:
+        if fi.op == "dynamic-slice":
+            ops = re.search(r"dynamic-slice\(([^)]*)\)", fi.line)
+            if ops:
+                src = ops.group(1).split(",")[0].strip().lstrip("%")
+                if src in sub.params:
+                    sliced[src] = sliced.get(src, 0) + tensor_bytes(
+                        fi.out_type)
+        if fi.op == "dynamic-update-slice":
+            ops = re.search(r"dynamic-update-slice\(([^)]*)\)", fi.line)
+            if ops:
+                names = [t.strip().lstrip("%")
+                         for t in ops.group(1).split(",")]
+                if names and names[0] in sub.params:
+                    dus_target = names[0]
+                if len(names) > 1 and names[1] in sub.symbols:
+                    dus_update += tensor_bytes(sub.symbols[names[1]])
+    root = sub.instrs[-1]
+    root_is_dus = root.op == "dynamic-update-slice" or (
+        root.op == "bitcast" and dus_target is not None)
+
+    in_eff = 0.0
+    for pname, ptype in sub.params.items():
+        if pname == dus_target and root_is_dus:
+            continue                          # aliased in-place buffer
+        if pname in sliced:
+            in_eff += sliced[pname]
+        else:
+            in_eff += tensor_bytes(ptype)
+    out_eff = dus_update if root_is_dus else tensor_bytes(ins.out_type)
+    return in_eff + out_eff
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_count: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    trip_counts: dict = dataclasses.field(default_factory=dict)
+
+
+_MEM_OPS = {"fusion", "dot", "convolution", "copy", "dynamic-slice",
+            "dynamic-update-slice", "scatter", "gather", "sort", "reduce",
+            "broadcast", "transpose", "reshape", "concatenate", "select",
+            "pad", "slice", "iota", "convert", "add", "multiply", "tanh",
+            "exponential", "rsqrt", "divide", "subtract", "maximum",
+            "minimum", "compare", "reduce-window", "custom-call"}
+
+
+def analyze(hlo_text: str, *, n_partitions: int = 1,
+            entry_hint: str = "main") -> HloCosts:
+    comps = split_computations(hlo_text)
+    entry = None
+    for name in comps:
+        if entry_hint in name:
+            entry = name
+            break
+    if entry is None:                       # fall back: last computation
+        entry = list(comps)[-1]
+
+    # identify fusion-body computations (costs counted at call sites)
+    fusion_bodies = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                cm = re.search(r"calls=%([\w.\-]+)", ins.line)
+                if cm:
+                    fusion_bodies.add(cm.group(1))
+
+    costs = HloCosts()
+    seen: Dict[str, float] = {}
+
+    def visit(name: str, mult: float):
+        if name not in comps:
+            return
+        # a computation may be visited from several sites; accumulate
+        comp = comps[name]
+        for ins in comp.instrs:
+            if ins.op == "while":
+                bm = re.search(r"body=%([\w.\-]+)", ins.line)
+                cm = re.search(r"condition=%([\w.\-]+)", ins.line)
+                trips = 1
+                if cm and cm.group(1) in comps:
+                    trips = loop_trip_count(comps[cm.group(1)])
+                costs.trip_counts[bm.group(1) if bm else ins.name] = trips
+                if bm:
+                    visit(bm.group(1), mult * trips)
+                continue
+            if ins.op in ("call", "conditional", "custom-call", "fusion",
+                          "map", "reduce", "sort", "scatter",
+                          "reduce-window", "select-and-scatter"):
+                for cm in _CALLED_RE.finditer(ins.line):
+                    sub = cm.group(1)
+                    if sub in comps and sub not in fusion_bodies:
+                        # reduce/sort combinators are tiny; fusion bodies
+                        # handled below for dot flops only
+                        pass
+            if ins.op == "dot":
+                costs.flops += mult * _dot_flops(ins, comp)
+            if ins.op == "convolution":
+                # rough: 2 · |out| · window  (document as approximation)
+                out = parse_shapes(ins.out_type)
+                if out:
+                    n = 1
+                    for d in out[0][1]:
+                        n *= d
+                    costs.flops += mult * 2.0 * n
+            if ins.op in COLLECTIVES:
+                wb = _collective_wire_bytes(ins, comp, n_partitions)
+                costs.collective_bytes += mult * wb
+                costs.per_collective[ins.op] += mult * wb
+                costs.collective_count[ins.op] += int(mult)
+            if ins.op in _MEM_OPS and name not in fusion_bodies:
+                costs.bytes_accessed += mult * _mem_bytes(
+                    ins, comp, comps, fusion_bodies)
+
+        # dot flops hidden inside fusion bodies (rare, but count them)
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                cm = re.search(r"calls=%([\w.\-]+)", ins.line)
+                if cm and cm.group(1) in comps:
+                    sub = comps[cm.group(1)]
+                    for fi in sub.instrs:
+                        if fi.op == "dot":
+                            costs.flops += mult * _dot_flops(fi, sub)
+
+    visit(entry, 1.0)
+    return costs

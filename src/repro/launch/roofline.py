@@ -1,0 +1,62 @@
+"""Roofline terms from the compiled dry-run artifact (TPU v5e targets).
+
+    compute    t_c = per-device HLO FLOPs / peak FLOP/s
+    memory     t_m = per-device HLO bytes accessed / HBM bandwidth
+    collective t_x = per-device collective wire bytes / ICI link bandwidth
+
+plus the "usefulness" ratio MODEL_FLOPS / HLO_FLOPS (catches remat and
+redundancy waste) and the roofline fraction
+    frac = t_model / max(t_c, t_m, t_x),   t_model = MODEL_FLOPS/(chips·peak)
+which is 1.0 for a perfectly compute-bound, zero-waste program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# hardware constants (assignment): TPU v5e-class
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_global: float
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    dominant: str = ""
+    useful_ratio: float = 0.0    # MODEL_FLOPS / global HLO FLOPs
+    fraction: float = 0.0        # roofline fraction (see module docstring)
+
+    def finalize(self) -> "Roofline":
+        self.t_compute = self.flops_per_device / PEAK_FLOPS
+        self.t_memory = self.bytes_per_device / HBM_BW
+        self.t_collective = self.collective_bytes_per_device / ICI_BW
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.dominant = max(terms, key=terms.get)
+        hlo_global = self.flops_per_device * self.chips
+        self.useful_ratio = (self.model_flops_global / hlo_global
+                             if hlo_global else 0.0)
+        t_model = self.model_flops_global / (self.chips * PEAK_FLOPS)
+        bound = max(terms.values())
+        self.fraction = t_model / bound if bound else 0.0
+        return self
+
+    def asdict(self):
+        return dataclasses.asdict(self)
+
+    def row(self) -> str:
+        return (f"{self.arch:22s} {self.shape:12s} {self.mesh:9s} "
+                f"tc={self.t_compute*1e3:9.3f}ms tm={self.t_memory*1e3:9.3f}ms "
+                f"tx={self.t_collective*1e3:9.3f}ms dom={self.dominant:10s} "
+                f"useful={self.useful_ratio:6.2f} frac={self.fraction:6.3f}")

@@ -1,0 +1,70 @@
+"""Production training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        [--steps 100] [--reduced] [--dry-run] [--pod-shape 32,8]
+
+Modes:
+    --dry-run    lower+compile the full-scale train cell against the
+                 production mesh (512 placeholder devices) and print the
+                 memory/roofline summary — the cluster-submission check.
+    --reduced    actually train the reduced config on the local devices
+                 (CPU-runnable end-to-end path with checkpointing).
+Full-scale execution uses the same code path with a real TPU mesh: the
+jit'd step, shardings, checkpointing and fault handling are identical.
+"""
+import argparse
+import os
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--pod-shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args(argv)
+
+    if args.dry_run:
+        # re-exec through the dry-run entry (it must own XLA_FLAGS)
+        from repro.launch import dryrun
+        pod_shape = (tuple(int(x) for x in args.pod_shape.split(","))
+                     if args.pod_shape else None)
+        rec = dryrun.run_cell(args.arch, args.shape,
+                              "multipod" if args.multi_pod else "pod",
+                              out_dir="runs/dryrun_cli", force=True,
+                              pod_shape=pod_shape)
+        return 0 if rec.get("ok") else 1
+
+    import jax
+    from repro.configs import get_config, get_reduced
+    from repro.data import SyntheticLM
+    from repro.models import transformer as T
+    from repro.optim import AdamW, cosine_with_warmup
+    from repro.train import Trainer, TrainConfig
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                       global_batch=args.batch, seed=0)
+    params = T.init_params(cfg, jax.random.PRNGKey(0),
+                           max_position=args.seq)
+    opt = AdamW(lr=cosine_with_warmup(args.lr, max(args.steps // 10, 1),
+                                      args.steps), weight_decay=0.01)
+    trainer = Trainer(cfg, TrainConfig(
+        steps=args.steps, ckpt_dir=args.ckpt_dir, log_every=10), opt)
+    trainer.install_preemption_handler()
+    _, _, info = trainer.run(params, lambda s: data.batches(s))
+    print(f"[launch.train] {cfg.name}: {info['steps']} steps, "
+          f"{info['faults']} faults")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

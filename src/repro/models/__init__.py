@@ -1,0 +1,9 @@
+"""Model zoo: one generic layer-stack interpreter covering all ten
+assigned architectures (see repro.configs)."""
+from . import attention, layers, ssm, transformer
+from .transformer import (decode_step, forward, init_cache, init_params,
+                          step_with_cache, encode, prefill_cross_caches)
+
+__all__ = ["attention", "layers", "ssm", "transformer", "decode_step",
+           "forward", "init_cache", "init_params", "step_with_cache",
+           "encode", "prefill_cross_caches"]

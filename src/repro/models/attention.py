@@ -1,0 +1,254 @@
+"""Attention: GQA with RoPE, sliding-window (sequence-stencil) masking,
+soft-capping, qk-norm, cross-attention, and KV-cache decode.
+
+Sliding-window layers are exactly the paper's stencil specialised to one
+dimension: each query attends to a fixed-radius neighbourhood of the
+sequence.  Global layers are the k=∞ degenerate case (map, not stencil) —
+see DESIGN.md §Arch-applicability.
+
+The grouped-query einsum keeps K/V unrepeated ((B,S,KH,hd) throughout), so
+the compiled HLO carries the GQA memory saving through to the roofline.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import Params, apply_rope, rms_norm, softcap
+
+NEG_INF = -2.0 ** 30  # large-negative mask value, safe in bf16/f32
+
+# Launcher-set flag: route train/prefill self-attention through the
+# Pallas flash sliding-window kernel (kernels/swa_attention).  Off by
+# default — on CPU the kernel runs in interpret mode (correctness tool);
+# on TPU the launcher flips it for the compiled fast path.
+USE_FLASH_SWA = False
+
+
+def set_flash_swa(enabled: bool):
+    global USE_FLASH_SWA
+    USE_FLASH_SWA = enabled
+
+
+def init_attention(key, d_model, num_heads, num_kv_heads, head_dim, dtype,
+                   qk_norm=False) -> Params:
+    ks = jax.random.split(key, 4)
+    s = float(1.0 / np.sqrt(d_model))
+    so = float(1.0 / np.sqrt(num_heads * head_dim))
+    p = {"wq": jax.random.normal(ks[0], (d_model, num_heads, head_dim),
+                                 dtype) * s,
+         "wk": jax.random.normal(ks[1], (d_model, num_kv_heads, head_dim),
+                                 dtype) * s,
+         "wv": jax.random.normal(ks[2], (d_model, num_kv_heads, head_dim),
+                                 dtype) * s,
+         "wo": jax.random.normal(ks[3], (num_heads, head_dim, d_model),
+                                 dtype) * so}
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((head_dim,), jnp.float32)
+        p["k_norm"] = jnp.zeros((head_dim,), jnp.float32)
+    return p
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int):
+    """Additive attention bias (B, Q, S) from position constraints.
+
+    ``window`` is the sequence-stencil radius: key j visible to query i iff
+    ``i - window < j <= i`` (one-sided causal neighbourhood).
+    """
+    qp = q_pos[:, :, None]                       # (B, Q, 1)
+    kp = k_pos[:, None, :]                       # (B|1, 1, S)
+    ok = kp >= 0        # ring-buffer caches mark empty slots with -1
+    if causal:
+        ok &= kp <= qp
+    if window:
+        ok &= kp > qp - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention(params: Params, x, *, positions, num_heads, num_kv_heads,
+              head_dim, rope_theta=10000.0, causal=True, window=0,
+              attn_softcap=0.0, qk_norm=False, norm_eps=1e-6,
+              x_kv=None, kv_cache: Optional[dict] = None,
+              cache_pos=None):
+    """Returns (out, new_kv_cache or None).
+
+    Training/prefill: ``kv_cache=None`` — keys/values from ``x`` (or
+    ``x_kv`` for cross-attention; no RoPE, no mask there).
+    Decode: ``kv_cache={'k','v'}`` (B, S_cache, KH, hd); the current
+    step's K/V are written at ``cache_pos`` and attention runs over the
+    whole cache under the causal(+window) mask.  Cross caches are
+    read-only (precomputed from the encoder output).
+    """
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"], norm_eps)
+    is_cross = x_kv is not None
+
+    if kv_cache is not None and is_cross:
+        k, v = kv_cache["k"], kv_cache["v"]          # precomputed, read-only
+        new_cache = kv_cache
+        k_pos = jnp.arange(k.shape[1])[None, :]
+    else:
+        src = x if not is_cross else x_kv
+        k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+        if qk_norm:
+            k = rms_norm(k, params["k_norm"], norm_eps)
+        if not is_cross and rope_theta:
+            # keys take the same absolute positions as the queries; the
+            # cache_pos only sets the write offset (prefill writes S keys)
+            k = apply_rope(k, positions, rope_theta)
+        if kv_cache is not None and "pos" in kv_cache:
+            # ring buffer (sliding-window layers): slot = position mod W
+            rk, rv, pos_arr = _ring_write(kv_cache, k, v, positions)
+            new_cache = {"k": rk, "v": rv, "pos": pos_arr}
+            if S > 1:
+                # prefill chunk: queries attend the chunk's OWN keys
+                # (the ring holds only the last W — correct for future
+                # steps, not for earlier in-chunk queries).  Single-chunk
+                # prefill from position 0 is the engine's contract.
+                k_pos = positions
+            else:
+                k, v = rk, rv
+                k_pos = pos_arr                      # absolute positions
+        elif kv_cache is not None and "k_scale" in kv_cache:
+            # int8-quantised cache: write quantised, read dequantised
+            # (the dequant fuses into the scores/AV dots — HBM moves
+            # int8 bytes, halving the decode cells' dominant term)
+            qk, sk = _quantize_kv(k)
+            qv, sv = _quantize_kv(v)
+            ck = _scatter_cache(kv_cache["k"], qk, cache_pos)
+            cv = _scatter_cache(kv_cache["v"], qv, cache_pos)
+            csk = _scatter_cache(kv_cache["k_scale"], sk, cache_pos)
+            csv = _scatter_cache(kv_cache["v_scale"], sv, cache_pos)
+            new_cache = {"k": ck, "v": cv, "k_scale": csk, "v_scale": csv}
+            k = _dequantize_kv(ck, csk, x.dtype)
+            v = _dequantize_kv(cv, csv, x.dtype)
+            k_pos = jnp.arange(k.shape[1])[None, :]
+        elif kv_cache is not None:                   # decode self-attention
+            k = _scatter_cache(kv_cache["k"], k, cache_pos)
+            v = _scatter_cache(kv_cache["v"], v, cache_pos)
+            new_cache = {"k": k, "v": v}
+            k_pos = jnp.arange(k.shape[1])[None, :]
+        else:                                        # train / prefill
+            new_cache = None
+            k_pos = positions if not is_cross else \
+                jnp.arange(k.shape[1])[None, :]
+
+    if not is_cross and rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+
+    if (USE_FLASH_SWA and kv_cache is None and not is_cross and causal
+            and S % 128 == 0 and not qk_norm):
+        # flash path: (B,S,H,hd) -> (B·H,S,hd); kv stay per-group
+        from repro.kernels.swa_attention import swa_attention
+        qf = q.transpose(0, 2, 1, 3).reshape(B * num_heads, S, head_dim)
+        kf = k.transpose(0, 2, 1, 3).reshape(B * num_kv_heads, S,
+                                             head_dim)
+        vf = v.transpose(0, 2, 1, 3).reshape(B * num_kv_heads, S,
+                                             head_dim)
+        of = swa_attention(qf, kf, vf, window=window, causal=True,
+                           softcap=attn_softcap,
+                           interpret=jax.default_backend() != "tpu")
+        out = of.reshape(B, num_heads, S, head_dim).transpose(0, 2, 1, 3)
+        out = jnp.einsum("bqhk,hkd->bqd", out, params["wo"])
+        return out, new_cache
+
+    # grouped-query attention einsum: (B,S,KH,G,hd) vs (B,T,KH,hd)
+    G = num_heads // num_kv_heads
+    qg = q.reshape(B, S, num_kv_heads, G, head_dim)
+    scores = jnp.einsum("bqhgk,bshk->bhgqs", qg, k).astype(jnp.float32)
+    scores = scores * float(1.0 / np.sqrt(head_dim))
+    if attn_softcap:
+        scores = softcap(scores, attn_softcap)
+
+    bias = _mask_bias(positions, k_pos,
+                      causal=(causal and not is_cross),
+                      window=(window if not is_cross else 0))
+    scores = scores + bias[:, None, None]            # (B,1,1,Q,S)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, v)
+    out = out.reshape(B, S, num_heads, head_dim)
+    out = jnp.einsum("bqhk,hkd->bqd", out, params["wo"])
+    return out, new_cache
+
+
+def _ring_write(cache, k, v, positions):
+    """Write S_new keys into the W-slot ring at slots ``pos mod W``.
+
+    Keys are stored post-RoPE (absolute positions), so the ring only has
+    to remember each slot's absolute position for masking; empty slots
+    hold -1 and are masked out.  When S_new ≥ W only the last W entries
+    survive (anything older is outside the window by construction).
+    """
+    W = cache["k"].shape[1]
+    S_new = k.shape[1]
+    pos_row = positions[0]                        # uniform across batch
+    if S_new >= W:
+        keep = slice(S_new - W, S_new)
+        idx = pos_row[keep] % W
+        return (cache["k"].at[:, idx].set(k[:, keep].astype(
+                    cache["k"].dtype)),
+                cache["v"].at[:, idx].set(v[:, keep].astype(
+                    cache["v"].dtype)),
+                cache["pos"].at[:, idx].set(pos_row[keep][None]
+                                            .astype(jnp.int32)))
+    idx = pos_row % W
+    return (cache["k"].at[:, idx].set(k.astype(cache["k"].dtype)),
+            cache["v"].at[:, idx].set(v.astype(cache["v"].dtype)),
+            cache["pos"].at[:, idx].set(
+                jnp.broadcast_to(pos_row[None], cache["pos"][:, idx]
+                                 .shape).astype(jnp.int32)))
+
+
+def _scatter_cache(cache, new, cache_pos):
+    """Write (B, S_new, KH, hd) at step ``cache_pos`` into the cache.
+
+    ``cache_pos`` is (B, 1) with a uniform step index across the batch
+    (standard batched decode); the slice write keeps the update a cheap
+    dynamic-update-slice instead of a scatter.
+    """
+    pos0 = cache_pos.reshape(-1)[0]
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache, new.astype(cache.dtype), pos0, axis=1)
+
+
+def init_kv_cache(batch, max_seq, num_kv_heads, head_dim,
+                  dtype=jnp.bfloat16, window: int = 0,
+                  quant: bool = False):
+    """Decode cache.  Sliding-window layers with ``window < max_seq`` get
+    a ring buffer of W slots plus a per-slot absolute-position array
+    (−1 = empty) — cache memory W/max_seq of the full layout.
+
+    ``quant=True``: int8 per-(token, kv-head) symmetric quantisation —
+    halves cache bytes vs bf16 (the dominant term of the memory-bound
+    decode cells); scales stored f32 per slot.  Ring layers keep the
+    model dtype (they are already W/S of the footprint)."""
+    if window and window < max_seq:
+        z = jnp.zeros((batch, window, num_kv_heads, head_dim), dtype)
+        return {"k": z, "v": jnp.zeros_like(z),
+                "pos": jnp.full((batch, window), -1, jnp.int32)}
+    if quant:
+        z = jnp.zeros((batch, max_seq, num_kv_heads, head_dim), jnp.int8)
+        s = jnp.zeros((batch, max_seq, num_kv_heads), jnp.float32)
+        return {"k": z, "v": jnp.zeros_like(z),
+                "k_scale": s, "v_scale": jnp.zeros_like(s)}
+    z = jnp.zeros((batch, max_seq, num_kv_heads, head_dim), dtype)
+    return {"k": z, "v": jnp.zeros_like(z)}
+
+
+def _quantize_kv(x):
+    """Symmetric int8 per-(token, head): returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-10)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)

@@ -1,0 +1,181 @@
+"""Shared model layers: norms, RoPE, MLPs, MoE.
+
+Everything is functional (params are explicit pytrees) so the whole stack
+is transparent to pjit/shard_map, scan-over-layers, remat, and the
+dry-run's eval_shape path (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+Params = dict  # nested param pytrees
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return ((1.0 + scale.astype(jnp.float32)) * out).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 style logit soft-capping: cap·tanh(x/cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+# -- RoPE -------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> np.ndarray:
+    """Whisper-style fixed sinusoidal embeddings."""
+    pos = np.arange(seq)[:, None]
+    inv = 1.0 / (10000 ** (np.arange(0, dim, 2) / dim))
+    ang = pos * inv[None, :]
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1).astype(np.float32)
+
+
+# -- MLP --------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, gated: bool, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = float(1.0 / np.sqrt(d_model))
+    s_out = float(1.0 / np.sqrt(d_ff))
+    p = {"up": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+         "down": jax.random.normal(k2, (d_ff, d_model), dtype) * s_out}
+    if gated:
+        p["gate"] = jax.random.normal(k3, (d_model, d_ff), dtype) * s_in
+    return p
+
+
+def mlp(params: Params, x, act: str = "silu"):
+    a = ACTS[act]
+    up = x @ params["up"]
+    h = a(x @ params["gate"]) * up if "gate" in params else a(up)
+    return h @ params["down"]
+
+
+# -- MoE --------------------------------------------------------------------
+
+def init_moe(key, d_model, n_experts, expert_d_ff, n_shared, shared_d_ff,
+             gated: bool, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    s_in = float(1.0 / np.sqrt(d_model))
+    s_out = float(1.0 / np.sqrt(expert_d_ff))
+    ncols = 3 if gated else 2
+    p = {
+        "router": jax.random.normal(ks[0], (d_model, n_experts),
+                                    jnp.float32) * s_in,
+        # experts stacked on a leading axis => expert-parallel shardable
+        "w_up": jax.random.normal(ks[1], (n_experts, d_model, expert_d_ff),
+                                  dtype) * s_in,
+        "w_gate": jax.random.normal(ks[2], (n_experts, d_model, expert_d_ff),
+                                    dtype) * s_in,
+        "w_down": jax.random.normal(ks[3], (n_experts, expert_d_ff, d_model),
+                                    dtype) * s_out,
+    }
+    if n_shared:
+        p["shared"] = init_mlp(jax.random.fold_in(key, 7), d_model,
+                               shared_d_ff, gated, dtype)
+    return p
+
+
+def moe(params: Params, x, *, top_k: int, act: str = "silu",
+        capacity_factor: float = 1.25, dropless: bool = False):
+    """Token-choice top-k MoE, capacity-based sorted dispatch (GShard-style).
+
+    The TPU-native formulation: flatten the (token, choice) assignments,
+    sort by expert id, rank each token within its expert, drop past the
+    per-expert capacity ``C = ceil(T·k/E · capacity_factor)``, scatter into
+    an (E, C, D) buffer, run every expert as one batched einsum on the MXU,
+    and scatter-add weighted results back.  With the expert axis sharded on
+    the ``model`` mesh axis this is expert parallelism — the dispatch
+    scatter/gather lower to the token⇄expert all-to-all.
+    Returns (output, aux) with load-balancing stats.
+    """
+    a = ACTS[act]
+    B, S, D = x.shape
+    E = params["w_up"].shape[0]
+    xt = x.reshape(-1, D)                                    # (T, D)
+    T = xt.shape[0]
+    # dropless: worst case one expert receives every token (C = T) —
+    # exact but memory ∝ E·T; used for decode/consistency paths
+    C = T if dropless else max(
+        1, int(np.ceil(T * top_k / E * capacity_factor)))
+
+    logits = (xt.astype(jnp.float32) @ params["router"])     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)               # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # flatten assignments and sort by expert id (stable → earlier tokens win)
+    eid = top_i.reshape(-1)                                  # (T·k,)
+    tid = jnp.repeat(jnp.arange(T), top_k)
+    wgt = top_p.reshape(-1)
+    order = jnp.argsort(eid, stable=True)
+    eid_s, tid_s, wgt_s = eid[order], tid[order], wgt[order]
+    # rank within expert = position − first position of that expert
+    first = jnp.searchsorted(eid_s, eid_s, side="left")
+    pos_s = jnp.arange(T * top_k) - first
+    keep = pos_s < C
+    # dropped assignments are routed OUT OF BOUNDS so mode="drop"
+    # discards them (an in-range clamp would overwrite slot (e, 0))
+    eid_c = jnp.where(keep, eid_s, E)
+    pos_c = jnp.where(keep, pos_s, 0)
+
+    # dispatch: (E, C, D) expert buffers
+    xe = jnp.zeros((E, C, D), x.dtype).at[eid_c, pos_c].set(
+        xt[tid_s], mode="drop")
+    h = a(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"])     # (E, C, D)
+
+    # combine: weighted scatter-add back to token order
+    back = ye[jnp.where(keep, eid_s, 0), pos_c] \
+        * (wgt_s * keep).astype(x.dtype)[:, None]
+    y = jnp.zeros((T, D), x.dtype).at[tid_s].add(back, mode="drop")
+    if "shared" in params:
+        y = y + mlp(params["shared"], xt, act)
+    # aux: load-balance loss terms (Switch-style) + drop fraction
+    me = probs.mean(axis=0)                                  # router prob mass
+    ce = jnp.zeros((E,), jnp.float32).at[eid].add(1.0) / (T * top_k)
+    aux = {"lb_loss": E * jnp.sum(me * ce),
+           "router_z": jnp.mean(
+               jax.scipy.special.logsumexp(logits, axis=-1) ** 2),
+           "drop_frac": 1.0 - keep.mean()}
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,117 @@
+"""Expert-parallel MoE dispatch via shard_map (beyond-paper optimisation).
+
+The GSPMD-auto path (repro.models.layers.moe) scatters tokens into an
+(E, C, D) buffer; with experts sharded on the model axis the partitioner
+falls back to all-gathering the whole buffer per layer — measured at
+~5.4 GB per layer-pass on qwen3-moe-30b-a3b (EXPERIMENTS.md §Perf).
+
+This explicit schedule exploits the mesh structure instead:
+
+* tokens are data-sharded and *replicated* across the model axis — so
+  every model shard already holds the tokens it needs;
+* each model shard routes all its local tokens but dispatches ONLY into
+  its own E/tp experts (local scatter, local einsum, local combine);
+* the per-expert partial outputs are summed with ONE psum over the model
+  axis per MoE layer (the only collective: T_loc·D wire).
+
+Semantics note: capacity is enforced per (data-shard × expert) —
+C_loc = ceil(T_loc·k/E·factor) — the standard per-device capacity of
+large-scale MoE systems (vs the global-sorted capacity of the dense
+path).  Load-balance aux losses are pmean'd across the mesh.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .layers import ACTS, Params, mlp
+
+
+def expert_parallel_moe(params: Params, x, *, top_k: int, act: str,
+                        capacity_factor: float, mesh: Mesh,
+                        dp_axes: Sequence[str], ep_axis: str = "model"):
+    """Drop-in for :func:`repro.models.layers.moe` under a mesh."""
+    B, S, D = x.shape
+    E = params["w_up"].shape[0]
+    tp = mesh.shape[ep_axis]
+    a = ACTS[act]
+
+    # batch sharding only over axes the batch actually divides (B=1
+    # long-context decode runs token-replicated over data — correct,
+    # just redundant; the expert math still shards over the model axis)
+    dp = []
+    rem = B
+    for ax in dp_axes:
+        n = mesh.shape[ax]
+        if rem % n == 0:
+            dp.append(ax)
+            rem //= n
+    dp = tuple(dp)
+    x_spec = P(dp if dp else None, None, None)
+    w_spec = P(ep_axis, None, None)
+    r_spec = P(None, None)
+
+    def local_moe(router, w_gate, w_up, w_down, xb):
+        e_loc = w_up.shape[0]                      # E / tp experts here
+        my_first = lax.axis_index(ep_axis) * e_loc
+        xt = xb.reshape(-1, D)                     # (T_loc, D)
+        T = xt.shape[0]
+        C = max(1, int(np.ceil(T * top_k / E * capacity_factor)))
+
+        logits = xt.astype(jnp.float32) @ router   # (T_loc, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_i = lax.top_k(probs, top_k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+        eid = top_i.reshape(-1)
+        tid = jnp.repeat(jnp.arange(T), top_k)
+        wgt = top_p.reshape(-1)
+        order = jnp.argsort(eid, stable=True)
+        eid_s, tid_s, wgt_s = eid[order], tid[order], wgt[order]
+        first = jnp.searchsorted(eid_s, eid_s, side="left")
+        pos_s = jnp.arange(T * top_k) - first
+        # keep only assignments that land in THIS shard's expert range;
+        # everything else goes OUT OF BOUNDS so mode="drop" discards it
+        local = (eid_s >= my_first) & (eid_s < my_first + e_loc)
+        keep = (pos_s < C) & local
+        le = jnp.where(keep, eid_s - my_first, e_loc)
+        pc = jnp.where(keep, pos_s, 0)
+
+        xe = jnp.zeros((e_loc, C, D), xb.dtype).at[le, pc].set(
+            xt[tid_s], mode="drop")
+        h = a(jnp.einsum("ecd,edf->ecf", xe, w_gate)) \
+            * jnp.einsum("ecd,edf->ecf", xe, w_up)
+        ye = jnp.einsum("ecf,efd->ecd", h, w_down)
+        back = ye[jnp.where(keep, le, 0), pc] \
+            * (wgt_s * keep.astype(wgt_s.dtype))[:, None].astype(xb.dtype)
+        y = jnp.zeros((T, D), xb.dtype).at[tid_s].add(back, mode="drop")
+        y = lax.psum(y, ep_axis)                   # THE one collective
+        # aux (pmean'd so every shard agrees)
+        me = probs.mean(axis=0)
+        ce = jnp.zeros((E,), jnp.float32).at[eid].add(1.0) / (T * top_k)
+        lb = E * jnp.sum(me * ce)
+        rz = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+        drop = 1.0 - (pos_s < C).mean()
+        aux = jnp.stack([lb, rz, drop])
+        for ax in dp:
+            aux = lax.pmean(aux, ax)
+        aux = lax.pmean(aux, ep_axis)
+        return y.reshape(xb.shape), aux
+
+    y, aux_v = jax.shard_map(
+        local_moe, mesh=mesh,
+        in_specs=(r_spec, w_spec, w_spec, w_spec, x_spec),
+        out_specs=(x_spec, P()), check_vma=False)(
+            params["router"], params["w_gate"], params["w_up"],
+            params["w_down"], x)
+    if "shared" in params:
+        y = y + mlp(params["shared"], x.reshape(-1, D),
+                    act).reshape(x.shape)
+    aux = {"lb_loss": aux_v[0], "router_z": aux_v[1],
+           "drop_frac": aux_v[2]}
+    return y, aux

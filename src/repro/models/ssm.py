@@ -1,0 +1,231 @@
+"""Mamba-2 (SSD, state-space duality — arXiv:2405.21060) in JAX.
+
+The SSD chunked algorithm is an instance of the paper's pattern vocabulary:
+
+* the depthwise causal conv (width 4) is a one-sided 1-D **stencil** along
+  the sequence;
+* the chunked scan is a **stencil-with-carry**: quadratic attention-like
+  compute *within* a chunk (local neighbourhood) plus a linear recurrence
+  *between* chunk states — which is exactly how the distributed stencil
+  propagates halo state between shards;
+* decode is the -s variant's ideal case: O(1) state, the loop carries
+  ``h`` in device memory across iterations (memory persistence).
+
+Scalar-per-head A (the Mamba-2 restriction), grouped B/C (ngroups=1).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import Params, rms_norm
+
+CHUNK = 128  # SSD chunk length (MXU-aligned)
+
+
+def ssm_dims(d_model: int, expand: int = 2, head_dim: int = 64,
+             state: int = 128, conv_width: int = 4, ngroups: int = 1):
+    d_inner = expand * d_model
+    nheads = d_inner // head_dim
+    return dict(d_inner=d_inner, nheads=nheads, head_dim=head_dim,
+                state=state, conv_width=conv_width, ngroups=ngroups)
+
+
+def init_ssm(key, d_model, dims, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    di, nh, hd, n, cw = (dims["d_inner"], dims["nheads"], dims["head_dim"],
+                         dims["state"], dims["conv_width"])
+    g = dims["ngroups"]
+    s = float(1.0 / np.sqrt(d_model))
+    # in_proj emits [z (di), x (di), B (g·n), C (g·n), dt (nh)]
+    d_proj = 2 * di + 2 * g * n + nh
+    return {
+        "in_proj": jax.random.normal(ks[0], (d_model, d_proj), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (cw, di + 2 * g * n), dtype) * 0.2,
+        "conv_b": jnp.zeros((di + 2 * g * n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.asarray(
+            np.log(np.expm1(np.random.default_rng(0).uniform(
+                1e-3, 0.1, nh))), jnp.float32),
+        "norm": jnp.zeros((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (di, d_model), dtype)
+        * float(1.0 / np.sqrt(di)),
+    }
+
+
+def _split_proj(z_x_b_c_dt, dims):
+    di, n, g, nh = (dims["d_inner"], dims["state"], dims["ngroups"],
+                    dims["nheads"])
+    z, x, B, C, dt = jnp.split(
+        z_x_b_c_dt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    return z, x, B, C, dt
+
+
+def causal_conv(x, w, b, cache: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along the sequence (1-D stencil, k one-sided).
+
+    x: (B, S, C); w: (W, C).  With ``cache`` (B, W-1, C) this is the decode
+    step: returns (y, new_cache).
+    """
+    W = w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+        new_cache = None
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+        new_cache = xp[:, -(W - 1):].astype(cache.dtype)
+    # taps formulation: y_t = Σ_w x_{t-(W-1)+w} · w_w  (shift algebra)
+    S = x.shape[1]
+    y = sum(xp[:, i:i + S] * w[i] for i in range(W)) + b
+    return jax.nn.silu(y), new_cache
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, dims, h0=None):
+    """SSD forward over a full sequence (training / prefill).
+
+    x: (Bt, S, nh, hd); dt: (Bt, S, nh); A: (nh,) negative decay rates;
+    B, C: (Bt, S, g, n).  Returns (y, h_last) with h: (Bt, nh, hd, n).
+
+    Chunked algorithm: intra-chunk quadratic term (masked (C·Bᵀ) kernel on
+    the MXU) + inter-chunk linear recurrence over chunk states (the carry).
+    """
+    Bt, S, nh, hd = x.shape
+    n = dims["state"]
+    g = dims["ngroups"]
+    Q = min(CHUNK, S)
+    S_orig = S
+    if S % Q:
+        # pad to a chunk multiple with dt=0 steps: a=exp(0)=1 keeps the
+        # state, dt·x·B=0 adds nothing — padding is exactly inert
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    # broadcast groups over heads
+    heads_per_g = nh // g
+    Bh = jnp.repeat(B, heads_per_g, axis=2) if g != nh else B   # (Bt,S,nh,n)
+    Ch = jnp.repeat(C, heads_per_g, axis=2) if g != nh else C
+
+    xc = x.reshape(Bt, nc, Q, nh, hd)
+    dtc = dt.reshape(Bt, nc, Q, nh)
+    Bc = Bh.reshape(Bt, nc, Q, nh, n)
+    Cc = Ch.reshape(Bt, nc, Q, nh, n)
+
+    dA = dtc * (-jnp.exp(A))[None, None, None, :]       # log-decay ≤ 0
+    La = jnp.cumsum(dA, axis=2)                         # (Bt,nc,Q,nh)
+    Ltot = La[:, :, -1]                                 # (Bt,nc,nh)
+
+    # intra-chunk: y_i = Σ_{j<=i} exp(La_i - La_j) (C_i·B_j) dt_j x_j
+    CB = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc)       # (Bt,nc,nh,Q,Q)
+    Li = La.transpose(0, 1, 3, 2)                       # (Bt,nc,nh,Q)
+    decay = jnp.exp(Li[..., :, None] - Li[..., None, :])  # exp(La_i - La_j)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    kernel = jnp.where(mask, CB * decay, 0.0)
+    dx = (dtc[..., None] * xc)                          # (Bt,nc,Q,nh,hd)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", kernel, dx)
+
+    # chunk states: S_c = Σ_j exp(Ltot - La_j) dt_j x_j ⊗ B_j
+    sdecay = jnp.exp(Ltot[:, :, None] - La)             # (Bt,nc,Q,nh)
+    states = jnp.einsum("bcqh,bcqhp,bcqhn->bchpn", sdecay, dx, Bc)
+
+    # inter-chunk recurrence: h_c = exp(Ltot_c) h_{c-1} + S_c  (the carry)
+    def scan_fn(h, inp):
+        st, ltot = inp
+        h_new = jnp.exp(ltot)[..., None, None] * h + st
+        return h_new, h
+    h_init = (jnp.zeros((Bt, nh, hd, n), jnp.float32)
+              if h0 is None else h0.astype(jnp.float32))
+    states_t = states.transpose(1, 0, 2, 3, 4)          # (nc,Bt,nh,hd,n)
+    ltot_t = Ltot.transpose(1, 0, 2)                    # (nc,Bt,nh)
+    h_last, h_prevs = jax.lax.scan(scan_fn, h_init, (states_t, ltot_t))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)          # (Bt,nc,nh,hd,n)
+
+    # inter-chunk contribution: y_i += exp(La_i) C_i · h_{c-1}
+    y_inter = jnp.einsum("bcqh,bcqhn,bchpn->bcqhp",
+                         jnp.exp(La), Cc, h_prevs)
+    y = (y_intra + y_inter).reshape(Bt, S, nh, hd)
+    y = y + D[None, None, :, None] * x
+    return y[:, :S_orig].astype(x.dtype), h_last
+
+
+def ssd_ref(x, dt, A, B, C, D, *, dims, h0=None):
+    """Sequential-scan oracle for :func:`ssd_chunked` (O(S) steps)."""
+    Bt, S, nh, hd = x.shape
+    n = dims["state"]
+    g = dims["ngroups"]
+    heads_per_g = nh // g
+    Bh = jnp.repeat(B, heads_per_g, axis=2) if g != nh else B
+    Ch = jnp.repeat(C, heads_per_g, axis=2) if g != nh else C
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                            # (Bt,nh,hd) ...
+        a = jnp.exp(dtt * (-jnp.exp(A))[None, :])        # (Bt,nh)
+        h = a[..., None, None] * h + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, h)
+        return h, y
+    h_init = (jnp.zeros((Bt, nh, hd, n), jnp.float32)
+              if h0 is None else h0.astype(jnp.float32))
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    h_last, ys = jax.lax.scan(step, h_init, xs)
+    y = ys.transpose(1, 0, 2, 3) + D[None, None, :, None] * x
+    return y.astype(x.dtype), h_last
+
+
+def mamba2_block(params: Params, x, *, dims, norm_eps=1e-6,
+                 ssm_cache: Optional[dict] = None, use_ref=False):
+    """Full Mamba-2 block.  Returns (out, new_cache or None).
+
+    cache = {'conv': (B, W-1, di+2gn), 'h': (B, nh, hd, n)} for decode.
+    """
+    Bt, S, D = x.shape
+    di, nh, hd, n = (dims["d_inner"], dims["nheads"], dims["head_dim"],
+                     dims["state"])
+    proj = x @ params["in_proj"]
+    z, xs, Bv, Cv, dt = _split_proj(proj, dims)
+    conv_in = jnp.concatenate([xs, Bv, Cv], axis=-1)
+    conv_cache = None if ssm_cache is None else ssm_cache["conv"]
+    conv_out, new_conv = causal_conv(conv_in, params["conv_w"],
+                                     params["conv_b"], conv_cache)
+    xs, Bv, Cv = jnp.split(conv_out, [di, di + dims["ngroups"] * n], axis=-1)
+    xs = xs.reshape(Bt, S, nh, hd)
+    Bv = Bv.reshape(Bt, S, dims["ngroups"], n)
+    Cv = Cv.reshape(Bt, S, dims["ngroups"], n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+
+    A = params["A_log"]
+    h0 = None if ssm_cache is None else ssm_cache["h"]
+    if ssm_cache is not None and S == 1:
+        # decode: exact single-step recurrence (O(1) state update)
+        y, h_last = ssd_ref(xs, dt, A, Bv, Cv, params["D"], dims=dims, h0=h0)
+    elif use_ref:
+        y, h_last = ssd_ref(xs, dt, A, Bv, Cv, params["D"], dims=dims, h0=h0)
+    else:
+        y, h_last = ssd_chunked(xs, dt, A, Bv, Cv, params["D"], dims=dims,
+                                h0=h0)
+    y = y.reshape(Bt, S, di)
+    # gated RMSNorm (Mamba-2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], norm_eps)
+    out = y @ params["out_proj"]
+    new_cache = (None if ssm_cache is None
+                 else {"conv": new_conv, "h": h_last})
+    return out, new_cache
+
+
+def init_ssm_cache(batch, dims, dtype=jnp.float32):
+    """conv cache in the model dtype (it joins activations directly);
+    the recurrent state h stays fp32 (exactness of the recurrence)."""
+    di, nh, hd, n = (dims["d_inner"], dims["nheads"], dims["head_dim"],
+                     dims["state"])
+    cw, g = dims["conv_width"], dims["ngroups"]
+    return {"conv": jnp.zeros((batch, cw - 1, di + 2 * g * n), dtype),
+            "h": jnp.zeros((batch, nh, hd, n), jnp.float32)}

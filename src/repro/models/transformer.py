@@ -1,0 +1,410 @@
+"""Generic layer-stack model: interprets an ArchConfig's block pattern.
+
+One code path serves all ten assigned architectures (dense GQA, local+global
+alternation, fine-grained MoE, SSD/Mamba-2, hybrid interleave, enc-dec,
+VLM-stub).  The repeating block unit is scanned (`jax.lax.scan`) over
+stacked parameters so trace/compile cost is O(unit), not O(depth), and
+remat checkpoints exactly one unit.
+
+Entry points:
+    init_params(cfg, key, max_position)      — real weights (smoke/training)
+    forward(cfg, params, batch, ...)         — logits for train / prefill
+    init_cache(cfg, batch, max_seq)          — stacked KV/SSM caches
+    decode_step(cfg, params, cache, tokens, pos, ...) — one serving step
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, LayerSpec
+from . import ssm as ssm_mod
+from .attention import attention, init_attention, init_kv_cache
+from .layers import (Params, init_mlp, init_moe, mlp, moe, rms_norm,
+                     sinusoidal_positions, softcap)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# Optional activation-sharding hook (installed by the launcher; identity
+# by default so the model stays mesh-agnostic).  Signature:
+#     hook(tag: str, x: Array) -> Array        tags: "attn_in", "attn_out"
+# Used for context-parallel attention (ArchConfig.attn_sequence_parallel).
+_SHARDING_HOOK = None
+
+# Optional explicit expert-parallel MoE dispatch (shard_map schedule from
+# repro.models.moe_parallel), installed by the launcher together with its
+# mesh.  None -> the mesh-agnostic GSPMD-auto path in layers.moe.
+_MOE_PARALLEL = None
+
+
+def set_sharding_hook(fn):
+    global _SHARDING_HOOK
+    _SHARDING_HOOK = fn
+
+
+def set_moe_parallel(fn):
+    global _MOE_PARALLEL
+    _MOE_PARALLEL = fn
+
+
+def _hook(tag, x):
+    return _SHARDING_HOOK(tag, x) if _SHARDING_HOOK is not None else x
+
+
+def _ckpt_name(cfg, x, name):
+    if cfg.remat and cfg.remat_policy == "block_outs":
+        from jax.ad_checkpoint import checkpoint_name
+        return checkpoint_name(x, name)
+    return x
+
+
+def _remat_policy(cfg):
+    if cfg.remat_policy == "block_outs":
+        return jax.checkpoint_policies.save_only_these_names("block_out")
+    return None
+
+
+def _ssm_dims(cfg: ArchConfig):
+    return ssm_mod.ssm_dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim,
+                            cfg.ssm_state, cfg.ssm_conv, cfg.ssm_ngroups)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(cfg: ArchConfig, spec: LayerSpec, key) -> Params:
+    dt = _dtype(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": jnp.zeros((D,), jnp.float32)}
+    if spec.kind == "attn":
+        p["attn"] = init_attention(ks[0], D, cfg.num_heads, cfg.num_kv_heads,
+                                   cfg.resolved_head_dim, dt,
+                                   qk_norm=cfg.qk_norm)
+    else:
+        p["ssm"] = ssm_mod.init_ssm(ks[0], D, _ssm_dims(cfg), dt)
+    if cfg.post_norms:
+        p["post_ln1"] = jnp.zeros((D,), jnp.float32)
+    if spec.cross:
+        p["ln_x"] = jnp.zeros((D,), jnp.float32)
+        p["cross"] = init_attention(ks[1], D, cfg.num_heads,
+                                    cfg.num_kv_heads,
+                                    cfg.resolved_head_dim, dt)
+    if spec.ffn == "dense":
+        p["ln2"] = jnp.zeros((D,), jnp.float32)
+        p["mlp"] = init_mlp(ks[2], D, cfg.d_ff, cfg.mlp_gated, dt)
+    elif spec.ffn == "moe":
+        p["ln2"] = jnp.zeros((D,), jnp.float32)
+        p["moe"] = init_moe(ks[2], D, cfg.n_experts, cfg.expert_d_ff,
+                            cfg.n_shared_experts, cfg.shared_d_ff,
+                            cfg.mlp_gated, dt)
+        if cfg.post_norms:
+            p["post_ln2"] = jnp.zeros((D,), jnp.float32)
+        return p
+    if cfg.post_norms and spec.ffn != "none":
+        p["post_ln2"] = jnp.zeros((D,), jnp.float32)
+    return p
+
+
+def init_params(cfg: ArchConfig, key, max_position: int = 0) -> Params:
+    dt = _dtype(cfg)
+    D, V = cfg.d_model, cfg.padded_vocab
+    keys = jax.random.split(key, 16)
+    params: Params = {
+        "embed": jax.random.normal(keys[0], (V, D), dt) * (D ** -0.5),
+        "final_norm": jnp.zeros((D,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = jax.random.normal(keys[1], (D, V), dt) \
+            * (D ** -0.5)
+    if cfg.abs_pos_embed:
+        mp = max_position or 4096
+        params["pos_embed"] = jax.random.normal(keys[2], (mp, D), dt) * 0.01
+    if cfg.vision_patches:
+        params["vision_proj"] = jax.random.normal(
+            keys[3], (cfg.vision_embed_dim, D), dt) \
+            * (cfg.vision_embed_dim ** -0.5)
+
+    pattern = (cfg.decoder_pattern() if cfg.is_encoder_decoder
+               else cfg.block_pattern())
+    prefix, unit, reps = pattern
+    params["prefix"] = [init_layer(cfg, s, jax.random.fold_in(keys[4], i))
+                        for i, s in enumerate(prefix)]
+    params["unit"] = [
+        jax.vmap(lambda k, s=s: init_layer(cfg, s, k))(
+            jax.random.split(jax.random.fold_in(keys[5], i), reps))
+        for i, s in enumerate(unit)]
+
+    if cfg.is_encoder_decoder:
+        enc_spec = LayerSpec(kind="attn", ffn="dense")
+        params["encoder"] = {
+            "unit": [jax.vmap(lambda k: init_layer(cfg, enc_spec, k))(
+                jax.random.split(keys[6], cfg.encoder_layers))],
+            "final_norm": jnp.zeros((D,), jnp.float32),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def apply_layer(cfg: ArchConfig, spec: LayerSpec, p: Params, x, *,
+                positions, causal=True, cache=None, cache_pos=None,
+                enc_out=None, cross_cache=None):
+    """One block: (attn|ssm) + optional cross-attn + FFN, pre-norm residual.
+    Returns (x, new_cache, aux)."""
+    aux = {}
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        if cfg.attn_sequence_parallel:
+            h = _hook("attn_in", h)
+        out, new_attn = attention(
+            p["attn"], h, positions=positions, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta if cfg.use_rope else 0.0,
+            causal=causal, window=spec.window,
+            attn_softcap=cfg.attn_softcap, qk_norm=cfg.qk_norm,
+            norm_eps=cfg.norm_eps, kv_cache=cache, cache_pos=cache_pos)
+        if cfg.attn_sequence_parallel:
+            out = _hook("attn_out", out)
+        out = _ckpt_name(cfg, out, "block_out")
+        new_cache = new_attn
+    else:
+        out, new_cache = ssm_mod.mamba2_block(
+            p["ssm"], h, dims=_ssm_dims(cfg), norm_eps=cfg.norm_eps,
+            ssm_cache=cache)
+        out = _ckpt_name(cfg, out, "block_out")
+    if cfg.post_norms:
+        out = rms_norm(out, p["post_ln1"], cfg.norm_eps)
+    x = x + out
+
+    if spec.cross:
+        h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        out, _ = attention(
+            p["cross"], h, positions=positions, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            causal=False, x_kv=enc_out, kv_cache=cross_cache)
+        x = x + out
+
+    if spec.ffn != "none":
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.ffn == "dense":
+            out = mlp(p["mlp"], h, cfg.act)
+        elif _MOE_PARALLEL is not None and not cfg.moe_dropless:
+            out, aux = _MOE_PARALLEL(p["moe"], h, top_k=cfg.top_k,
+                                     act=cfg.act,
+                                     capacity_factor=cfg
+                                     .moe_capacity_factor)
+        else:
+            out, aux = moe(p["moe"], h, top_k=cfg.top_k, act=cfg.act,
+                           capacity_factor=cfg.moe_capacity_factor,
+                           dropless=cfg.moe_dropless or cache is not None)
+        if cfg.post_norms:
+            out = rms_norm(out, p["post_ln2"], cfg.norm_eps)
+        out = _ckpt_name(cfg, out, "block_out")
+        x = x + out
+    return x, new_cache, aux
+
+
+def _zero_aux():
+    return {"lb_loss": jnp.zeros((), jnp.float32),
+            "router_z": jnp.zeros((), jnp.float32),
+            "drop_frac": jnp.zeros((), jnp.float32)}
+
+
+def _acc_aux(acc, aux):
+    if not aux:
+        return acc
+    return {k: acc[k] + aux.get(k, 0.0) for k in acc}
+
+
+def run_stack(cfg: ArchConfig, params: Params, x, *, pattern, positions,
+              causal=True, caches=None, cache_pos=None, enc_out=None,
+              cross_caches=None, param_root=None):
+    """Apply prefix layers then the scanned repeat unit.
+
+    ``caches``/``cross_caches``: {"prefix": [...], "unit": [...]} matching
+    the pattern, every unit leaf stacked on a leading reps axis.
+    Returns (x, new_caches, aux_sum).
+    """
+    root = params if param_root is None else param_root
+    prefix, unit, reps = pattern
+    aux_sum = _zero_aux()
+    new_caches = {"prefix": [], "unit": []}
+
+    for i, spec in enumerate(prefix):
+        c = caches["prefix"][i] if caches else None
+        x, nc, aux = apply_layer(cfg, spec, root["prefix"][i], x,
+                                 positions=positions, causal=causal,
+                                 cache=c, cache_pos=cache_pos,
+                                 enc_out=enc_out)
+        new_caches["prefix"].append(nc)
+        aux_sum = _acc_aux(aux_sum, aux)
+
+    unit_params = root["unit"]
+    unit_caches = caches["unit"] if caches else [None] * len(unit)
+    unit_cross = cross_caches["unit"] if cross_caches else [None] * len(unit)
+
+    def body(carry, xs):
+        x = carry
+        p_slices, c_slices, xc_slices = xs
+        aux_acc = _zero_aux()
+        nc_out = []
+        for spec, p, c, xc in zip(unit, p_slices, c_slices, xc_slices):
+            x, nc, aux = apply_layer(cfg, spec, p, x, positions=positions,
+                                     causal=causal, cache=c,
+                                     cache_pos=cache_pos, enc_out=enc_out,
+                                     cross_cache=xc)
+            nc_out.append(nc)
+            aux_acc = _acc_aux(aux_acc, aux)
+        return x, (nc_out, aux_acc)
+
+    body_fn = jax.checkpoint(body, policy=_remat_policy(cfg)) \
+        if cfg.remat else body
+    x, (ncs, auxs) = jax.lax.scan(
+        body_fn, x, (unit_params, unit_caches, unit_cross), length=reps)
+    new_caches["unit"] = ncs
+    aux_sum = {k: aux_sum[k] + auxs[k].sum() for k in aux_sum}
+    return x, new_caches, aux_sum
+
+
+# ---------------------------------------------------------------------------
+# model entry points
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ArchConfig, params: Params, frames):
+    """Whisper encoder over stub frame embeddings (B, F, D)."""
+    D = cfg.d_model
+    pos = jnp.asarray(sinusoidal_positions(frames.shape[1], D),
+                      frames.dtype)
+    x = frames + pos[None]
+    pattern = ((), (LayerSpec(kind="attn", ffn="dense"),),
+               cfg.encoder_layers)
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1])[None],
+                                 frames.shape[:2])
+    x, _, _ = run_stack(cfg, params, x, pattern=pattern,
+                        positions=positions, causal=False,
+                        param_root=params["encoder"])
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def embed_inputs(cfg: ArchConfig, params: Params, tokens, patch_embeds=None,
+                 pos_offset=0):
+    """Token (+vision-stub) embedding with position bookkeeping."""
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if patch_embeds is not None:
+        pe = patch_embeds.astype(x.dtype) @ params["vision_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    B, S = x.shape[:2]
+    positions = pos_offset + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.abs_pos_embed:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], pos_offset, S, axis=0)[None]
+    return x, positions
+
+
+def lm_head(cfg: ArchConfig, params: Params, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    # The logits einsum runs in the model dtype and is upcast AFTER: the
+    # loss/softmax stay fp32, but the cotangent entering the backward
+    # network is bf16 — otherwise an f32 logits einsum propagates f32
+    # cotangents through every layer, doubling gradient collective and
+    # HBM traffic (measured 2× on qwen3-moe; EXPERIMENTS.md §Perf).
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+def forward(cfg: ArchConfig, params: Params, batch: dict):
+    """Training / evaluation forward: returns (logits, aux)."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(cfg, params, batch["frames"])
+    x, positions = embed_inputs(cfg, params, batch["tokens"],
+                                batch.get("patch_embeds"))
+    pattern = (cfg.decoder_pattern() if cfg.is_encoder_decoder
+               else cfg.block_pattern())
+    x, _, aux = run_stack(cfg, params, x, pattern=pattern,
+                          positions=positions, causal=True,
+                          enc_out=enc_out)
+    return lm_head(cfg, params, x), aux
+
+
+# -- serving ----------------------------------------------------------------
+
+def init_layer_cache(cfg: ArchConfig, spec: LayerSpec, batch: int,
+                     max_seq: int, dtype=jnp.bfloat16,
+                     quant: bool = False):
+    if spec.kind == "attn":
+        return init_kv_cache(batch, max_seq, cfg.num_kv_heads,
+                             cfg.resolved_head_dim, dtype,
+                             window=spec.window, quant=quant)
+    return ssm_mod.init_ssm_cache(batch, _ssm_dims(cfg), dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16, quant: bool = False):
+    """Stacked decode caches for the whole stack (``quant``: int8 KV)."""
+    pattern = (cfg.decoder_pattern() if cfg.is_encoder_decoder
+               else cfg.block_pattern())
+    prefix, unit, reps = pattern
+    caches = {"prefix": [init_layer_cache(cfg, s, batch, max_seq, dtype,
+                                          quant)
+                         for s in prefix]}
+    caches["unit"] = [
+        jax.tree.map(lambda l: jnp.broadcast_to(
+            l[None], (reps,) + l.shape).astype(l.dtype),
+            init_layer_cache(cfg, s, batch, max_seq, dtype, quant))
+        for s in unit]
+    return caches
+
+
+def prefill_cross_caches(cfg: ArchConfig, params: Params, enc_out):
+    """Precompute read-only cross-attention K/V from the encoder output."""
+    prefix, unit, reps = cfg.decoder_pattern()
+
+    def kv(p):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"])
+        return {"k": k, "v": v}
+    return {"prefix": [kv(p) for p in params["prefix"]],
+            "unit": [jax.vmap(kv)(p) for p in params["unit"]]}
+
+
+def step_with_cache(cfg: ArchConfig, params: Params, caches, tokens, pos,
+                    patch_embeds=None, enc_out=None, cross_caches=None):
+    """Forward S tokens (S=1 decode, S>1 prefill) writing the cache at
+    ``pos``.  Returns (logits, new_caches)."""
+    x, positions = embed_inputs(cfg, params, tokens, patch_embeds,
+                                pos_offset=pos)
+    B = x.shape[0]
+    cache_pos = jnp.full((B, 1), pos, jnp.int32) if jnp.ndim(pos) == 0 \
+        else pos
+    pattern = (cfg.decoder_pattern() if cfg.is_encoder_decoder
+               else cfg.block_pattern())
+    x, new_caches, aux = run_stack(
+        cfg, params, x, pattern=pattern, positions=positions, causal=True,
+        caches=caches, cache_pos=cache_pos, enc_out=enc_out,
+        cross_caches=cross_caches)
+    return lm_head(cfg, params, x), new_caches
+
+
+def decode_step(cfg: ArchConfig, params: Params, caches, tokens, pos,
+                enc_out=None, cross_caches=None):
+    """One serving step: ``tokens`` (B, 1) at absolute position ``pos``."""
+    return step_with_cache(cfg, params, caches, tokens, pos,
+                           enc_out=enc_out, cross_caches=cross_caches)

@@ -1,0 +1,5 @@
+from .adam import AdamW, AdamState, global_norm
+from .schedule import cosine_with_warmup, constant
+
+__all__ = ["AdamW", "AdamState", "global_norm", "cosine_with_warmup",
+           "constant"]

@@ -1,0 +1,3 @@
+from .engine import GenerateConfig, generate, prefill
+
+__all__ = ["GenerateConfig", "generate", "prefill"]

@@ -1,0 +1,84 @@
+"""Request batching for the serving engine (the stream tier, 1:1 mode).
+
+Host-side dynamic batcher: requests arrive with ragged prompts; the
+batcher groups them by EXACT prompt length (no padding enters the
+attention window — pad tokens in the causal past would corrupt the
+shorter prompts), forms FIFO batches up to ``max_batch`` per group, and
+drives each batch through ONE fused generate loop (prefill +
+Loop-of-stencil-reduce-s decode).
+
+This is the paper's farm over stream items at serving scale: every
+batch is an independent stream item for the device; done-masked decode
+lets requests inside a batch finish at their own lengths.  Length
+bucketing with proper pad masking is the next step and is noted in
+DESIGN.md; exact grouping keeps the compile cache small when clients
+quantise prompt lengths themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from .engine import GenerateConfig, generate
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (len,) int32
+
+
+@dataclasses.dataclass
+class Result:
+    rid: int
+    tokens: np.ndarray           # (n_generated,) int32
+
+
+class Batcher:
+    """FIFO exact-length-grouped batcher over the generate engine."""
+
+    def __init__(self, cfg: ArchConfig, params, gcfg: GenerateConfig, *,
+                 max_batch: int = 8, cache_dtype=jnp.float32):
+        self.cfg, self.params, self.gcfg = cfg, params, gcfg
+        self.max_batch = max_batch
+        self.cache_dtype = cache_dtype
+        self._queue: List[Request] = []
+
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    def _form_batch(self) -> Optional[List[Request]]:
+        if not self._queue:
+            return None
+        L = len(self._queue[0].prompt)      # FIFO head sets the group
+        batch, rest = [], []
+        for r in self._queue:
+            if len(batch) < self.max_batch and len(r.prompt) == L:
+                batch.append(r)
+            else:
+                rest.append(r)
+        self._queue = rest
+        return batch
+
+    def run_all(self) -> List[Result]:
+        """Drain the queue; returns results in completion order."""
+        out: List[Result] = []
+        while True:
+            batch = self._form_batch()
+            if not batch:
+                break
+            toks = np.stack([r.prompt for r in batch]).astype(np.int32)
+            gen, lengths, _ = generate(
+                self.cfg, self.params, jnp.asarray(toks), self.gcfg,
+                cache_dtype=self.cache_dtype)
+            gen = np.asarray(gen)
+            for i, r in enumerate(batch):
+                out.append(Result(rid=r.rid,
+                                  tokens=gen[i, :int(lengths[i])]))
+        return out

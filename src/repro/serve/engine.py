@@ -1,0 +1,107 @@
+"""Serving engine — autoregressive decode as Loop-of-stencil-reduce-s.
+
+The decode loop is the -s variant verbatim (DESIGN.md §4):
+    stencil step : one `decode_step` (attention over the KV-cache
+                   neighbourhood — the sliding-window layers are literal
+                   sequence stencils)
+    reduce /⊕    : `all` monoid over per-sequence done flags
+    state s      : position counter + PRNG key
+    condition c  : every sequence hit EOS ∨ token budget
+
+The whole generation lowers to ONE on-device while_loop: the KV cache is
+the paper's persistent device memory — it never leaves HBM, and the
+done-reduce feeding the condition runs on device (beyond the paper, which
+still bounced the reduce result to the host each iteration).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.pattern import LoopOfStencilReduce
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class GenerateConfig:
+    max_new_tokens: int = 64
+    eos_id: int = 1
+    temperature: float = 0.0       # 0 → greedy
+    seed: int = 0
+
+
+def prefill(cfg: ArchConfig, params, tokens, *, max_seq: int,
+            cache_dtype=jnp.bfloat16, patch_embeds=None, enc_out=None,
+            cross_caches=None):
+    """Run the prompt through the model, returning (last_logits, caches)."""
+    B = tokens.shape[0]
+    caches = T.init_cache(cfg, B, max_seq, cache_dtype)
+    logits, caches = T.step_with_cache(
+        cfg, params, caches, tokens, 0, patch_embeds=patch_embeds,
+        enc_out=enc_out, cross_caches=cross_caches)
+    return logits[:, -1], caches
+
+
+def generate(cfg: ArchConfig, params, prompt, gcfg: GenerateConfig, *,
+             max_seq: Optional[int] = None, cache_dtype=jnp.bfloat16,
+             enc_out=None, cross_caches=None, patch_embeds=None):
+    """Batched generation.  Returns (tokens (B, max_new), lengths, iters)."""
+    B, S0 = prompt.shape
+    P = cfg.vision_patches or 0
+    max_seq = max_seq or (S0 + P + gcfg.max_new_tokens)
+
+    last_logits, caches = prefill(
+        cfg, params, prompt, max_seq=max_seq, cache_dtype=cache_dtype,
+        patch_embeds=patch_embeds, enc_out=enc_out,
+        cross_caches=cross_caches)
+
+    def sample(logits, key):
+        if gcfg.temperature > 0:
+            return jax.random.categorical(key, logits / gcfg.temperature,
+                                          axis=-1)
+        return jnp.argmax(logits, axis=-1)
+
+    key0 = jax.random.PRNGKey(gcfg.seed)
+    first = sample(last_logits, key0)                     # (B,)
+    out0 = jnp.zeros((B, gcfg.max_new_tokens), jnp.int32)
+    out0 = out0.at[:, 0].set(first)
+    done0 = first == gcfg.eos_id
+
+    def step_fn(carry):
+        caches, out, done, t, key = carry
+        tok = jax.lax.dynamic_slice_in_dim(out, t - 1, 1, axis=1)
+        logits, caches = T.decode_step(
+            cfg, params, caches, tok, S0 + P + t - 1,
+            enc_out=enc_out, cross_caches=cross_caches)
+        key, sub = jax.random.split(key)
+        nxt = sample(logits[:, 0], sub)
+        nxt = jnp.where(done, jnp.full_like(nxt, gcfg.eos_id), nxt)
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, nxt[:, None].astype(out.dtype), t, axis=1)
+        done = done | (nxt == gcfg.eos_id)
+        return (caches, out, done, t + 1, key)
+
+    loop = LoopOfStencilReduce(
+        f=step_fn, mode="step", combine="all", identity=True,
+        measure=lambda c: c[2],                   # per-sequence done flags
+        cond=lambda r, s: jnp.logical_or(r, s >= gcfg.max_new_tokens),
+        state_init=lambda: jnp.asarray(1, jnp.int32),
+        state_update=lambda s, a, it: s + 1,
+        max_iters=gcfg.max_new_tokens)
+
+    res = loop.run((caches, out0, done0, jnp.asarray(1, jnp.int32), key0))
+    _, out, done, _, _ = res.a
+    lengths = jnp.where(
+        (out == gcfg.eos_id).any(axis=1),
+        (out == gcfg.eos_id).argmax(axis=1) + 1, gcfg.max_new_tokens)
+    return out, lengths, res.iters
+
+
+def generate_jit(cfg: ArchConfig, gcfg: GenerateConfig, **kw):
+    """Jit-compiled generate closure (static cfg/gcfg)."""
+    return jax.jit(functools.partial(generate, cfg, gcfg=gcfg, **kw))

@@ -1,0 +1,198 @@
+"""Parallelism policy: param/activation/optimizer PartitionSpecs per arch.
+
+Axes (production mesh, launch/mesh.py):
+    pod    — data parallelism across pods (slow inter-pod links carry only
+             the gradient all-reduce)
+    data   — in-pod data parallelism + ZeRO-1 optimizer-state sharding +
+             sequence sharding for the 500k decode cells
+    model  — tensor parallelism (vocab / heads / d_ff / experts) and
+             KV-cache sequence sharding for decode
+
+Rules are divisibility-aware: e.g. K/V heads shard on the model axis only
+when ``kv_heads % tp == 0``; otherwise the head_dim (always a multiple of
+16 across the assigned archs) is sharded so K/V stay tensor-parallel
+without GSPMD padding.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel axes: ('pod','data') multi-pod, ('data',) single."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def mesh_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis] if axis in mesh.axis_names else 1
+
+
+def param_spec(cfg: ArchConfig, path: str, shape, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path.
+
+    ``shape`` includes the leading unit-stack (reps) axis for scanned
+    leaves; the path contains 'unit' in that case.
+    """
+    tp = mesh_size(mesh, "model")
+    stacked = "unit" in path and "cache" not in path
+    off = 1 if stacked else 0           # skip the layer-stack axis
+    dims = list(shape)
+    spec = [None] * len(dims)
+
+    def set_if(idx, cond=True):
+        if cond and _div(dims[idx], tp):
+            spec[idx] = "model"
+            return True
+        return False
+
+    if "embed" in path and "pos" not in path and "patch" not in path:
+        # token embedding (V, D) / unembed (D, V): shard the vocab dim
+        vdim = int(np.argmax(dims))
+        set_if(vdim)
+    elif any(k in path for k in ("wq", "wk", "wv", "wo")):
+        # Megatron-style GQA TP.  Heads dims (H on wq/wo, KH on wk/wv)
+        # shard on the model axis when divisible; when KH < tp the K/V
+        # projections REPLICATE (classic GQA replication — keeps the
+        # scores einsum head-sharded with no giant score all-reduce);
+        # when even H < tp (whisper), every projection shards head_dim
+        # so q·k contracts a sharded dim instead.
+        h_dim = off + (0 if "wo" in path else 1)   # H/KH position
+        d_dim = off + (1 if "wo" in path else 2)   # head_dim position
+        is_kv = ("wk" in path) or ("wv" in path)
+        nh = dims[h_dim]
+        if cfg.attn_sequence_parallel:
+            pass          # context-parallel attention: weights replicated,
+            #               the sequence shards on the model axis instead
+        elif _div(nh, tp):
+            spec[h_dim] = "model"
+        elif is_kv:
+            pass                                   # replicate K/V heads
+        else:
+            set_if(d_dim)
+    elif any(k in path for k in ("w_up", "w_gate", "w_down")):
+        set_if(off + 0)                  # expert-parallel: experts axis
+    elif "router" in path:
+        pass                             # tiny; replicate
+    elif "up" in path or "gate" in path:
+        set_if(off + 1)                  # (D, F): column parallel
+    elif "down" in path:
+        set_if(off + 0)                  # (F, D): row parallel
+    elif "in_proj" in path:
+        set_if(off + 1) or set_if(off + 0)   # (D, d_proj)
+    elif "out_proj" in path:
+        set_if(off + 0) or set_if(off + 1)   # (d_inner, D)
+    elif "vision_proj" in path:
+        set_if(off + 1)
+    # norms / biases / conv / A_log / dt_bias / pos_embed: replicated
+    return P(*spec)
+
+
+def zero1_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Extend a param spec with ZeRO-1 optimizer-state sharding: shard the
+    largest still-unsharded dim divisible by the data axis."""
+    dz = mesh_size(mesh, "data")
+    if dz == 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    cands = [(shape[i], i) for i, s in enumerate(entries)
+             if s is None and _div(shape[i], dz) and shape[i] >= dz]
+    if not cands:
+        return P(*entries)
+    _, idx = max(cands)
+    entries[idx] = "data"
+    return P(*entries)
+
+
+def _path_str(kp) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in kp)
+
+
+def params_shardings(cfg: ArchConfig, params_shape, mesh: Mesh):
+    """NamedSharding pytree for the params (shape pytree or real params)."""
+    def one(kp, leaf):
+        return NamedSharding(
+            mesh, param_spec(cfg, _path_str(kp), leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_shardings(cfg: ArchConfig, opt_shape, mesh: Mesh):
+    """AdamState shardings: step replicated; master/m/v = param spec +
+    ZeRO-1 over the data axis."""
+    def one(kp, leaf):
+        path = _path_str(kp)
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        base = param_spec(cfg, path, leaf.shape, mesh)
+        return NamedSharding(mesh, zero1_spec(base, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, opt_shape)
+
+
+def batch_spec(mesh: Mesh, batch_size: int, ndim: int = 2) -> P:
+    """Shard the batch dim over every data-parallel axis that divides it."""
+    axes = [a for a in dp_axes(mesh)]
+    use = []
+    rem = batch_size
+    for a in axes:
+        n = mesh_size(mesh, a)
+        if rem % n == 0 and rem >= n:
+            use.append(a)
+            rem //= n
+    lead = tuple(use) if use else None
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def cache_shardings(cfg: ArchConfig, cache_shape, mesh: Mesh,
+                    batch_size: int, seq_shard: bool = True):
+    """Decode-cache shardings.
+
+    KV caches (reps, B, S, KH, hd): batch over the dp axes; the cache
+    *sequence* over the model axis (flash-decode style load balancing —
+    every chip holds a slice of every head's history).  When B == 1
+    (long_500k) the data axis joins the sequence sharding instead.
+    SSM caches: batch over dp only (state is O(1), nothing else to shard).
+    """
+    dp = [a for a in dp_axes(mesh) if _div(batch_size, mesh_size(mesh, a))]
+    # compose multi-axis batch sharding only while divisible
+    bs = []
+    rem = batch_size
+    for a in dp:
+        if rem % mesh_size(mesh, a) == 0:
+            bs.append(a)
+            rem //= mesh_size(mesh, a)
+    seq_axes = ["model"] if seq_shard else []
+    if batch_size == 1:
+        seq_axes = [a for a in dp_axes(mesh)] + seq_axes if seq_shard \
+            else []
+        bs = []
+
+    def one(kp, leaf):
+        path = _path_str(kp)
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 2:
+            spec[1] = tuple(bs) if bs else None       # batch dim
+        if "conv" in path or path.endswith("h"):      # ssm caches
+            return NamedSharding(mesh, P(*spec))
+        seq_ok = (seq_axes and leaf.ndim >= 3 and all(
+            _div(leaf.shape[2], mesh_size(mesh, a)) for a in seq_axes))
+        if leaf.ndim == 5 and seq_ok:                 # (reps,B,S,KH,hd)
+            spec[2] = tuple(seq_axes)
+        elif leaf.ndim == 4 and "scale" in path and seq_ok:
+            spec[2] = tuple(seq_axes)                 # int8 scales
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

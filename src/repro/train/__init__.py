@@ -1,0 +1,6 @@
+from .trainer import Trainer, TrainConfig
+from .objective import lm_loss, grad_accum_step
+from . import checkpoint
+
+__all__ = ["Trainer", "TrainConfig", "lm_loss", "grad_accum_step",
+           "checkpoint"]

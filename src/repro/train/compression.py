@@ -1,0 +1,74 @@
+"""Gradient compression for the slow inter-pod links: int8 quantised
+all-reduce with error feedback.
+
+At multi-pod scale the only cross-pod traffic is the gradient
+all-reduce; quantising it to int8 cuts the wire bytes 4× vs f32 (2× vs
+bf16).  Error feedback (Seide et al. / Karimireddy et al.) carries the
+quantisation residual into the next step, keeping SGD/Adam convergence
+unbiased in the long run.
+
+Design for the psum wire format: with n pods summing, each pod quantises
+to ±(127 // n) so the int8 sum cannot overflow — the collective itself
+runs on int8 payloads.  The shared scale is agreed with one scalar pmax
+per tensor (negligible traffic).
+
+Usage inside a shard_map over the 'pod' axis:
+
+    g_sum, err = ef_int8_psum(g_local, err, axis_name="pod")
+
+Property-tested in tests/train/test_compression.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize_int8(x: jnp.ndarray, n_peers: int):
+    """Symmetric per-tensor int8 quantisation, overflow-safe for a sum of
+    ``n_peers`` payloads.  Returns (q, scale)."""
+    qmax = max(1, 127 // max(1, n_peers))
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax / qmax, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def ef_int8_psum(g: jnp.ndarray, err: jnp.ndarray, axis_name: str
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-feedback int8 all-reduce of one gradient tensor.
+
+    Must run inside shard_map/pmap with ``axis_name`` bound.
+    Returns (summed fp32 gradient, new error-feedback residual).
+    """
+    n = lax.psum(1, axis_name)
+    gf = g.astype(jnp.float32) + err
+    # shared scale: every peer quantises against the global max
+    amax = lax.pmax(jnp.max(jnp.abs(gf)), axis_name)
+    qmax = 127 // jnp.maximum(1, n)
+    scale = jnp.maximum(amax / qmax.astype(jnp.float32), 1e-12)
+    q = jnp.clip(jnp.round(gf / scale), -qmax, qmax).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale      # residual feedback
+    total = lax.psum(q.astype(jnp.int8), axis_name)   # int8 on the wire
+    return total.astype(jnp.float32) * scale, new_err
+
+
+def ef_int8_psum_tree(grads: Any, err_tree: Any, axis_name: str
+                      ) -> Tuple[Any, Any]:
+    """Tree-mapped :func:`ef_int8_psum` (one scale per leaf)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(err_tree)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        s, ne = ef_int8_psum(g, e, axis_name)
+        out_g.append(s)
+        out_e.append(ne)
+    return (jax.tree_util.tree_unflatten(treedef, out_g),
+            jax.tree_util.tree_unflatten(treedef, out_e))
+
+
+def init_error_state(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)

@@ -1,0 +1,73 @@
+"""Training objective: next-token cross entropy (+ MoE aux losses) and the
+micro-batched gradient step (grad-accumulation scan).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+
+def lm_loss(cfg: ArchConfig, params, batch, *, lb_coef=0.01, z_coef=1e-4):
+    """Mean next-token CE over text positions (+ router aux for MoE)."""
+    logits, aux = T.forward(cfg, params, batch)
+    labels = batch["labels"]
+    P = cfg.vision_patches or 0
+    if P:
+        logits = logits[:, P:]     # loss only on text positions
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    ce = -ll.mean()
+    loss = ce
+    if cfg.n_experts:
+        loss = loss + lb_coef * aux["lb_loss"] + z_coef * aux["router_z"]
+    metrics = {"loss": ce, "lb_loss": aux["lb_loss"],
+               "router_z": aux["router_z"], "drop_frac": aux["drop_frac"]}
+    return loss, metrics
+
+
+def grad_accum_step(cfg: ArchConfig, params, batch, *, accum: int = 1,
+                    loss_fn=lm_loss):
+    """Gradients over ``accum`` microbatches via lax.scan.
+
+    The scan keeps per-microbatch activation memory bounded and lets XLA
+    overlap the (pod-axis) gradient reduction of slice i with the compute
+    of slice i+1 — the paper's compute/communication overlap at LM scale.
+    """
+    if accum == 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        return grads, loss, metrics
+
+    def split(x):
+        b = x.shape[0]
+        # (B,...) -> (B/accum, accum, ...) -> (accum, B/accum, ...):
+        # splitting the *trailing* factor keeps the leading dim divisible
+        # by the data axes, so GSPMD shards the microbatch (not the accum
+        # index) and every device sees B/(accum·dp) sequences per slice
+        return x.reshape(b // accum, accum, *x.shape[1:]).swapaxes(0, 1)
+    micro = jax.tree.map(split, batch)
+
+    def body(acc, mb):
+        grads_acc, loss_acc, met_acc = acc
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, mb), has_aux=True)(params)
+        grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+        met_acc = jax.tree.map(jnp.add, met_acc, metrics)
+        return (grads_acc, loss_acc + loss, met_acc), None
+
+    zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    zeros_m = {"loss": 0.0, "lb_loss": 0.0, "router_z": 0.0,
+               "drop_frac": 0.0}
+    zeros_m = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), zeros_m)
+    (grads, loss, metrics), _ = jax.lax.scan(
+        body, (zeros_g, jnp.zeros((), jnp.float32), zeros_m), micro)
+    inv = 1.0 / accum
+    return (jax.tree.map(lambda g: g * inv, grads), loss * inv,
+            jax.tree.map(lambda m: m * inv, metrics))

@@ -1,0 +1,182 @@
+"""Trainer — the Loop-of-stencil-reduce-s pattern at system scale.
+
+Pattern instantiation (DESIGN.md §4):
+    stencil step f : (params, opt) → (params, opt)    (k=0 map case over
+                                                       the sharded batch)
+    reduce /⊕     : mean loss (psum'd by pjit across the mesh)
+    state s       : optimizer state + step counter + fault counters
+    condition c   : step budget ∧ target loss ∧ NaN fault detector
+
+Two execution modes:
+
+* :meth:`Trainer.run` — production host loop: data prefetch, periodic
+  step-atomic checkpoints, NaN/spike **rollback with batch skip**,
+  preemption-signal flush, resume-from-latest.  The host loop is the
+  streaming tier; each iteration is one pattern application.
+* :meth:`Trainer.run_fused` — K steps lowered as ONE on-device
+  ``lax.while_loop`` over pre-staged batches via
+  :class:`repro.core.pattern.LoopOfStencilReduce` (step mode).  This is
+  the paper's device-memory-persistence claim at trainer scale, and the
+  benchmark pair run_fused-vs-host-loop reproduces the paper's
+  naïve-vs-persistent comparison on the training workload.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.pattern import LoopOfStencilReduce
+from repro.models import transformer as T
+from repro.optim import AdamW, AdamState
+from . import checkpoint as ckpt_lib
+from .objective import grad_accum_step, lm_loss
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    accum: int = 1
+    ckpt_dir: str = ""
+    ckpt_every: int = 100
+    keep_ckpts: int = 3
+    target_loss: float = 0.0        # 0 = disabled
+    log_every: int = 10
+    rollback_on_nan: bool = True
+    max_faults: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainConfig, optimizer: AdamW,
+                 *, loss_fn=lm_loss, step_jit_kwargs: Optional[dict] = None):
+        self.cfg, self.tcfg, self.opt = cfg, tcfg, optimizer
+        self.loss_fn = loss_fn
+        self._preempted = False
+        self._faults = 0
+        kw = step_jit_kwargs or {}
+
+        def train_step(params, opt_state, batch):
+            grads, loss, metrics = grad_accum_step(
+                cfg, params, batch, accum=tcfg.accum, loss_fn=loss_fn)
+            params, opt_state, stats = self.opt.update(grads, opt_state,
+                                                       params)
+            metrics = dict(metrics, **stats, total_loss=loss)
+            return params, opt_state, metrics
+
+        self.train_step = jax.jit(train_step, donate_argnums=(0, 1), **kw)
+
+    # -- fault tolerance hooks -------------------------------------------
+    def install_preemption_handler(self, signals=(signal.SIGTERM,)):
+        def _h(sig, frame):
+            self._preempted = True
+        for s in signals:
+            signal.signal(s, _h)
+
+    # -- production host loop --------------------------------------------
+    def run(self, params, batches, *, opt_state: Optional[AdamState] = None,
+            start_step: int = 0, log: Callable = print):
+        tc = self.tcfg
+        opt_state = opt_state if opt_state is not None \
+            else self.opt.init(params)
+        step = start_step
+
+        # resume from latest checkpoint if present
+        if tc.ckpt_dir and ckpt_lib.latest_step(tc.ckpt_dir) is not None:
+            (params, opt_state), step, _ = ckpt_lib.restore(
+                tc.ckpt_dir, (params, opt_state))
+            log(f"[trainer] resumed from step {step}")
+
+        last_good = None
+        history = []
+        it = iter(batches(step) if callable(batches) else batches)
+        t0 = time.time()
+        while step < tc.steps:
+            batch = next(it)
+            params, opt_state, m = self.train_step(params, opt_state, batch)
+            loss = float(m["total_loss"])
+            step += 1
+
+            if tc.rollback_on_nan and (loss != loss):      # NaN fault
+                self._faults += 1
+                log(f"[trainer] step {step}: NaN loss — fault "
+                    f"{self._faults}/{tc.max_faults}")
+                if self._faults > tc.max_faults:
+                    raise RuntimeError("fault budget exhausted")
+                if last_good is not None:
+                    params, opt_state, step = (
+                        jax.tree.map(jnp.asarray, last_good[0]),
+                        jax.tree.map(jnp.asarray, last_good[1]),
+                        last_good[2])
+                elif tc.ckpt_dir and ckpt_lib.latest_step(tc.ckpt_dir) \
+                        is not None:
+                    (params, opt_state), step, _ = ckpt_lib.restore(
+                        tc.ckpt_dir, (params, opt_state))
+                continue                                    # skip the batch
+
+            history.append(loss)
+            if step % tc.log_every == 0:
+                dt = (time.time() - t0) / tc.log_every
+                log(f"[trainer] step {step} loss={loss:.4f} "
+                    f"gnorm={float(m['grad_norm']):.3f} {dt*1e3:.0f}ms/it")
+                t0 = time.time()
+            if tc.ckpt_dir and step % tc.ckpt_every == 0:
+                ckpt_lib.save(tc.ckpt_dir, step, (params, opt_state),
+                              keep=tc.keep_ckpts)
+                last_good = (jax.device_get(params),
+                             jax.device_get(opt_state), step)
+            if self._preempted:
+                if tc.ckpt_dir:
+                    ckpt_lib.save(tc.ckpt_dir, step, (params, opt_state),
+                                  keep=tc.keep_ckpts)
+                log(f"[trainer] preempted at step {step}; checkpoint "
+                    "flushed")
+                break
+            if tc.target_loss and loss < tc.target_loss:
+                log(f"[trainer] target loss reached at step {step}")
+                break
+        if tc.ckpt_dir:
+            ckpt_lib.save(tc.ckpt_dir, step, (params, opt_state),
+                          keep=tc.keep_ckpts)
+        return params, opt_state, {"history": history, "steps": step,
+                                   "faults": self._faults}
+
+    # -- fused on-device segment (the paper's persistence, trainer-scale) -
+    def run_fused(self, params, opt_state, stacked_batches, *,
+                  target_loss: float = 0.0):
+        """Run K = leading-axis steps as ONE on-device while_loop.
+
+        ``stacked_batches``: pytree with a leading K axis, pre-staged in
+        device memory.  Returns (params, opt_state, last_loss, iters).
+        """
+        K = jax.tree.leaves(stacked_batches)[0].shape[0]
+        cfg, opt = self.cfg, self.opt
+
+        def step_fn(carry):
+            params, opt_state, ptr, _ = carry
+            batch = jax.tree.map(lambda x: x[ptr], stacked_batches)
+            grads, loss, _ = grad_accum_step(cfg, params, batch,
+                                             accum=self.tcfg.accum,
+                                             loss_fn=self.loss_fn)
+            params, opt_state, _ = opt.update(grads, opt_state, params)
+            return (params, opt_state, ptr + 1, loss)
+
+        loop = LoopOfStencilReduce(
+            f=step_fn, mode="step", combine="min", identity=jnp.inf,
+            measure=lambda c: c[3][None],
+            cond=lambda r, s: jnp.logical_or(
+                s >= K, r < target_loss if target_loss else False),
+            state_init=lambda: jnp.asarray(0, jnp.int32),
+            state_update=lambda s, a, it: s + 1,
+            max_iters=K)
+        res = jax.jit(loop.run)(
+            (params, opt_state, jnp.asarray(0, jnp.int32),
+             jnp.asarray(jnp.inf, jnp.float32)))
+        params, opt_state, _, last_loss = res.a
+        return params, opt_state, last_loss, res.iters

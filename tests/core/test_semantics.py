@@ -1,0 +1,126 @@
+"""Property tests: production stencil/reduce ≡ executable formal semantics.
+
+The semantics module transcribes the paper's §3.1 definitions; these tests
+are the bridge that lets every other layer (Pallas kernels, distributed
+halo, pattern loops) be validated transitively.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import semantics as sem
+from repro.core import (Boundary, stencil_taps, stencil_windows,
+                        tree_reduce, two_phase_reduce)
+
+BOUNDARIES = ["zero", "reflect", "wrap"]
+
+
+def arrays_2d(draw, min_side=3, max_side=12):
+    h = draw(st.integers(min_side, max_side))
+    w = draw(st.integers(min_side, max_side))
+    seed = draw(st.integers(0, 2**31 - 1))
+    a = np.random.default_rng(seed).normal(size=(h, w)).astype(np.float32)
+    return jnp.asarray(a)
+
+
+@st.composite
+def array2d(draw):
+    return arrays_2d(draw)
+
+
+class TestSigmaK:
+    @settings(max_examples=25, deadline=None)
+    @given(array2d(), st.integers(1, 2),
+           st.sampled_from(BOUNDARIES))
+    def test_neighborhood_shape_and_center(self, a, k, boundary):
+        w = sem.neighborhoods(a, k, boundary)
+        assert w.shape == a.shape + (2 * k + 1, 2 * k + 1)
+        # the window centre is the item itself (paper: w[k,k] = a[i])
+        np.testing.assert_array_equal(np.asarray(w[..., k, k]),
+                                      np.asarray(a))
+
+    @settings(max_examples=20, deadline=None)
+    @given(array2d(), st.integers(1, 2))
+    def test_zero_boundary_is_bottom(self, a, k):
+        w = sem.neighborhoods(a, k, "zero")
+        # corner item's upper-left neighbours are all ⊥ (=0)
+        corner = np.asarray(w[0, 0])
+        assert (corner[:k, :k] == 0).all()
+
+    @settings(max_examples=15, deadline=None)
+    @given(array2d(), st.integers(1, 2))
+    def test_indexed_variant_coordinates(self, a, k):
+        w, idx = sem.indexed_neighborhoods(a, k)
+        # centre index equals the item coordinate (σ̄_k definition)
+        ii, jj = np.meshgrid(np.arange(a.shape[0]), np.arange(a.shape[1]),
+                             indexing="ij")
+        np.testing.assert_array_equal(np.asarray(idx[..., k, k, 0]), ii)
+        np.testing.assert_array_equal(np.asarray(idx[..., k, k, 1]), jj)
+
+
+class TestStencilEquivalence:
+    """stencil_taps (shift algebra) ≡ α(f)∘σ_k (materialised windows)."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(array2d(), st.sampled_from(BOUNDARIES))
+    def test_laplacian(self, a, boundary):
+        def taps(get):
+            return (get(-1, 0) + get(1, 0) + get(0, -1) + get(0, 1)
+                    - 4.0 * get(0, 0))
+
+        def windows(w):
+            return (w[..., 0, 1] + w[..., 2, 1] + w[..., 1, 0]
+                    + w[..., 1, 2] - 4.0 * w[..., 1, 1])
+        out_t = stencil_taps(taps, a, 1, boundary)
+        out_w = sem.stencil(windows, a, 1, boundary)
+        np.testing.assert_allclose(np.asarray(out_t), np.asarray(out_w),
+                                   atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(array2d(), st.integers(1, 2), st.sampled_from(BOUNDARIES))
+    def test_window_mean(self, a, k, boundary):
+        win = 2 * k + 1
+
+        def taps(get):
+            import itertools
+            acc = 0.0
+            for di, dj in itertools.product(range(-k, k + 1), repeat=2):
+                acc = acc + get(di, dj)
+            return acc / win ** 2
+
+        def windows(w):
+            return w.mean(axis=(-1, -2))
+        np.testing.assert_allclose(
+            np.asarray(stencil_taps(taps, a, k, boundary)),
+            np.asarray(sem.stencil(windows, a, k, boundary)), atol=1e-5)
+
+
+class TestReduce:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(1, 300), st.integers(0, 2**31 - 1),
+           st.sampled_from(["sum", "max", "min"]))
+    def test_reduce_equals_numpy(self, n, seed, monoid):
+        x = jnp.asarray(np.random.default_rng(seed)
+                        .normal(size=(n,)).astype(np.float32))
+        from repro.core.reduce import MONOIDS
+        op, ident = MONOIDS[monoid]
+        want = {"sum": np.sum, "max": np.max, "min": np.min}[monoid](
+            np.asarray(x))
+        got_tree = tree_reduce(op, x, ident)
+        got_2ph = two_phase_reduce(op, x, ident, tile=32)
+        got_sem = sem.reduce_all(op, x, ident)
+        np.testing.assert_allclose(got_tree, want, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(got_2ph, want, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(got_sem, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2, 64), st.integers(0, 2**31 - 1))
+    def test_any_all_monoids(self, n, seed):
+        r = np.random.default_rng(seed)
+        x = jnp.asarray(r.integers(0, 2, n).astype(bool))
+        assert bool(tree_reduce(jnp.logical_or, x, False)) == bool(
+            np.asarray(x).any())
+        assert bool(tree_reduce(jnp.logical_and, x, True)) == bool(
+            np.asarray(x).all())

@@ -1,0 +1,89 @@
+"""Sliding-window flash attention kernel vs oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.swa_attention import swa_attention, swa_attention_ref
+
+
+@pytest.mark.parametrize("shape,window,causal", [
+    ((2, 256, 64), 0, True),       # full causal
+    ((2, 256, 64), 128, True),     # sliding window = 1 block
+    ((1, 512, 128), 256, True),    # window spans 2 blocks
+    ((2, 128, 64), 0, False),      # bidirectional (encoder)
+    ((1, 256, 64), 64, True),      # window < block
+    ((1, 384, 64), 200, True),     # window not block-aligned
+])
+def test_matches_oracle(shape, window, causal, rng):
+    BH, S, hd = shape
+    q = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    k = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    v = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    out = swa_attention(q, k, v, window=window, causal=causal,
+                        interpret=True)
+    ref = swa_attention_ref(q, k, v, window=window, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype, rng):
+    q = jnp.asarray(rng.normal(size=(2, 256, 64)), dtype)
+    k = jnp.asarray(rng.normal(size=(2, 256, 64)), dtype)
+    v = jnp.asarray(rng.normal(size=(2, 256, 64)), dtype)
+    out = swa_attention(q, k, v, window=128, interpret=True)
+    ref = swa_attention_ref(q, k, v, window=128)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_window_equals_stencil_taps_semantics(rng):
+    """A window-1 attention is the identity-ish stencil: each token
+    attends only to itself (causal, window=1)."""
+    q = jnp.asarray(rng.normal(size=(1, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 128, 64)), jnp.float32)
+    out = swa_attention(q, k, v, window=1, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v), atol=1e-5)
+
+
+def test_gqa_grouped_kv_index_map(rng):
+    """Native GQA: kv heads indexed via b // G in the BlockSpec."""
+    B, H, KH, S, hd = 2, 4, 2, 256, 64
+    q = jnp.asarray(rng.normal(size=(B * H, S, hd)), jnp.float32)
+    kv = jnp.asarray(rng.normal(size=(B * KH, S, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B * KH, S, hd)), jnp.float32)
+    out = swa_attention(q, kv, v, window=128, interpret=True)
+    # oracle: expand kv per head
+    G = H // KH
+    k_full = jnp.repeat(kv.reshape(B, KH, S, hd), G, axis=1) \
+        .reshape(B * H, S, hd)
+    v_full = jnp.repeat(v.reshape(B, KH, S, hd), G, axis=1) \
+        .reshape(B * H, S, hd)
+    ref = swa_attention_ref(q, k_full, v_full, window=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5)
+
+
+def test_model_attention_flash_path_matches_xla(rng):
+    """attention() with the flash flag == the XLA einsum path (gemma2-
+    style local layer: GQA + window + softcap + RoPE)."""
+    import repro.models.attention as A
+    from repro.models.attention import attention, init_attention
+    B, S, D, H, KH, hd = 2, 256, 64, 4, 2, 64
+    p = init_attention(jax.random.PRNGKey(0), D, H, KH, hd, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(B, S, D)) * 0.3, jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    kw = dict(positions=pos, num_heads=H, num_kv_heads=KH, head_dim=hd,
+              rope_theta=1e4, causal=True, window=128, attn_softcap=50.0)
+    ref, _ = attention(p, x, **kw)
+    A.set_flash_swa(True)
+    try:
+        out, _ = attention(p, x, **kw)
+    finally:
+        A.set_flash_swa(False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5)

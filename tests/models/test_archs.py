@@ -1,0 +1,234 @@
+"""Per-arch smoke tests (assignment deliverable f): reduced config, one
+forward + one train step on CPU, asserting shapes and no NaNs; plus
+decode≡forward consistency and SSD oracle checks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config, get_reduced
+from repro.models import transformer as T
+from repro.optim import AdamW
+from repro.train.objective import grad_accum_step, lm_loss
+
+B, S = 2, 32
+
+
+def make_batch(cfg, rng, with_labels=True):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))}
+    if with_labels:
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)))
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    if cfg.vision_patches:
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.vision_patches, cfg.vision_embed_dim)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_no_nan(self, arch, rng):
+        cfg = get_reduced(arch)
+        params = T.init_params(cfg, jax.random.PRNGKey(0), max_position=64)
+        logits, aux = jax.jit(
+            lambda p, b: T.forward(cfg, p, b))(params,
+                                               make_batch(cfg, rng, False))
+        exp_s = S + (cfg.vision_patches or 0)
+        assert logits.shape == (B, exp_s, cfg.padded_vocab)
+        assert not bool(jnp.isnan(logits).any())
+
+    def test_one_train_step_no_nan(self, arch, rng):
+        cfg = get_reduced(arch)
+        params = T.init_params(cfg, jax.random.PRNGKey(0), max_position=64)
+        opt = AdamW(lr=1e-3)
+        opt_state = opt.init(params)
+        batch = make_batch(cfg, rng)
+        grads, loss, metrics = grad_accum_step(cfg, params, batch, accum=2)
+        params, opt_state, stats = opt.update(grads, opt_state, params)
+        assert np.isfinite(float(loss))
+        assert np.isfinite(float(stats["grad_norm"]))
+        # loss is a plausible CE for a |V|-way guess
+        assert 0.0 < float(loss) < 2 * np.log(cfg.padded_vocab) + 10
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "deepseek-moe-16b",
+                                  "mamba2-130m", "jamba-v0.1-52b",
+                                  "whisper-base", "phi-3-vision-4.2b"])
+def test_decode_matches_forward(arch, rng):
+    """prefill+decode ≡ teacher-forced forward (cache correctness)."""
+    cfg = get_reduced(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0), max_position=64)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 16)))
+    batch = {"tokens": tokens}
+    enc_out = cross = patch = None
+    if cfg.is_encoder_decoder:
+        frames = jnp.asarray(rng.normal(size=(B, cfg.encoder_seq,
+                                               cfg.d_model)), jnp.float32)
+        batch["frames"] = frames
+        enc_out = T.encode(cfg, params, frames)
+        cross = T.prefill_cross_caches(cfg, params, enc_out)
+    if cfg.vision_patches:
+        patch = jnp.asarray(rng.normal(
+            size=(B, cfg.vision_patches, cfg.vision_embed_dim)),
+            jnp.float32)
+        batch["patch_embeds"] = patch
+    full, _ = T.forward(cfg, params, batch)
+
+    P = cfg.vision_patches or 0
+    caches = T.init_cache(cfg, B, max_seq=16 + P, dtype=jnp.float32)
+    lg, caches = T.step_with_cache(cfg, params, caches, tokens[:, :8], 0,
+                                   patch_embeds=patch, enc_out=enc_out,
+                                   cross_caches=cross)
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(full[:, :8 + P]), atol=2e-3)
+    for t in range(8, 16):
+        lg, caches = T.decode_step(cfg, params, caches, tokens[:, t:t + 1],
+                                   P + t, enc_out=enc_out,
+                                   cross_caches=cross)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, P + t]), atol=2e-3)
+
+
+def test_exact_configs_match_assignment():
+    """The full configs carry the assigned hyperparameters exactly."""
+    spec = {
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "yi-9b": (48, 4096, 32, 4, 11008, 64000),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    }
+    for arch, (L, D, H, KH, F, V) in spec.items():
+        c = get_config(arch)
+        got_f = c.expert_d_ff if arch == "deepseek-moe-16b" else (
+            c.expert_d_ff if arch == "qwen3-moe-30b-a3b" else c.d_ff)
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                got_f, c.vocab_size) == (L, D, H, KH, F, V), arch
+
+
+def test_moe_extras():
+    ds = get_config("deepseek-moe-16b")
+    assert (ds.n_experts, ds.top_k, ds.n_shared_experts) == (64, 6, 2)
+    qw = get_config("qwen3-moe-30b-a3b")
+    assert (qw.n_experts, qw.top_k) == (128, 8)
+    jb = get_config("jamba-v0.1-52b")
+    assert (jb.n_experts, jb.top_k, jb.attn_period, jb.attn_offset) \
+        == (16, 2, 8, 4)
+    mb = get_config("mamba2-130m")
+    assert mb.ssm_state == 128
+
+
+def test_ssd_chunked_vs_sequential_oracle(rng):
+    from repro.models import ssm
+    dims = ssm.ssm_dims(d_model=48, expand=2, head_dim=16, state=8)
+    Bt, S_ = 2, 300          # non-multiple of chunk: exercises padding
+    nh, hd, n = dims["nheads"], dims["head_dim"], dims["state"]
+    x = jnp.asarray(rng.normal(size=(Bt, S_, nh, hd)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (Bt, S_, nh)), jnp.float32)
+    A = jnp.asarray(np.log(rng.uniform(1, 8, nh)), jnp.float32)
+    Bv = jnp.asarray(rng.normal(size=(Bt, S_, 1, n)), jnp.float32)
+    Cv = jnp.asarray(rng.normal(size=(Bt, S_, 1, n)), jnp.float32)
+    Dv = jnp.asarray(rng.normal(size=(nh,)), jnp.float32)
+    yc, hc = ssm.ssd_chunked(x, dt, A, Bv, Cv, Dv, dims=dims)
+    yr, hr = ssm.ssd_ref(x, dt, A, Bv, Cv, Dv, dims=dims)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(yr), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(hc), np.asarray(hr), atol=3e-4)
+
+
+class TestRingCache:
+    """Sliding-window ring-buffer KV cache (window < max_seq)."""
+
+    def test_ring_engaged_for_local_layers(self):
+        cfg = get_reduced("gemma2-9b")
+        c = T.init_cache(cfg, 2, max_seq=16, dtype=jnp.float32)
+        local, global_ = c["unit"][0], c["unit"][1]
+        assert local["k"].shape[2] == cfg.sliding_window
+        assert "pos" in local and "pos" not in global_
+        assert global_["k"].shape[2] == 16
+
+    def test_decode_past_window_stays_exact(self, rng):
+        """Decoding far beyond the window wraps the ring repeatedly and
+        must still match the teacher-forced forward."""
+        cfg = get_reduced("gemma2-9b")           # window = 8
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        S = 40                                    # 5 ring revolutions
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, S)))
+        full, _ = T.forward(cfg, params, {"tokens": tokens})
+        caches = T.init_cache(cfg, 2, max_seq=S, dtype=jnp.float32)
+        lg, caches = T.step_with_cache(cfg, params, caches,
+                                       tokens[:, :4], 0)
+        for t in range(4, S):
+            lg, caches = T.decode_step(cfg, params, caches,
+                                       tokens[:, t:t + 1], t)
+            np.testing.assert_allclose(
+                np.asarray(lg[:, 0]), np.asarray(full[:, t]), atol=2e-3)
+
+    def test_prefill_longer_than_window(self, rng):
+        """Prefill S > W keeps only the last W keys — decode continues
+        correctly from a wrapped ring."""
+        cfg = get_reduced("gemma2-9b")
+        params = T.init_params(cfg, jax.random.PRNGKey(1))
+        S = 24
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, S)))
+        full, _ = T.forward(cfg, params, {"tokens": tokens})
+        caches = T.init_cache(cfg, 2, max_seq=S, dtype=jnp.float32)
+        lg, caches = T.step_with_cache(cfg, params, caches,
+                                       tokens[:, :20], 0)  # 20 > W=8
+        np.testing.assert_allclose(np.asarray(lg[:, -1]),
+                                   np.asarray(full[:, 19]), atol=2e-3)
+        for t in range(20, S):
+            lg, caches = T.decode_step(cfg, params, caches,
+                                       tokens[:, t:t + 1], t)
+            np.testing.assert_allclose(
+                np.asarray(lg[:, 0]), np.asarray(full[:, t]), atol=2e-3)
+
+
+class TestInt8KVCache:
+    """int8-quantised KV cache: ≈2× cache bytes for bounded logit error."""
+
+    def test_decode_tracks_forward_within_quant_tolerance(self, rng):
+        cfg = get_reduced("yi-9b")
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        S = 24
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, S)))
+        full, _ = T.forward(cfg, params, {"tokens": tokens})
+        caches = T.init_cache(cfg, 2, max_seq=S, dtype=jnp.float32,
+                              quant=True)
+        assert caches["unit"][0]["k"].dtype == jnp.int8
+        lg, caches = T.step_with_cache(cfg, params, caches,
+                                       tokens[:, :8], 0)
+        errs = [float(jnp.abs(lg - full[:, :8]).max())]
+        corr = []
+        for t in range(8, S):
+            lg, caches = T.decode_step(cfg, params, caches,
+                                       tokens[:, t:t + 1], t)
+            errs.append(float(jnp.abs(lg[:, 0] - full[:, t]).max()))
+            corr.append(float(np.corrcoef(
+                np.asarray(lg[:, 0]).ravel(),
+                np.asarray(full[:, t]).ravel())[0, 1]))
+        # bounded absolute logit error, near-perfect logit agreement
+        # (random-weight logits cluster within ~0.1, so argmax identity
+        # is not a meaningful criterion here; real checkpoints separate
+        # the top tokens by >> the quantisation error)
+        assert max(errs) < 0.15, max(errs)
+        assert min(corr) > 0.995, min(corr)
+
+    def test_quant_roundtrip_error_bounded(self, rng):
+        from repro.models.attention import _dequantize_kv, _quantize_kv
+        x = jnp.asarray(rng.normal(size=(2, 16, 4, 32)), jnp.float32)
+        q, s = _quantize_kv(x)
+        back = _dequantize_kv(q, s, jnp.float32)
+        rel = float(jnp.abs(back - x).max()
+                    / (jnp.abs(x).max() + 1e-9))
+        assert rel < 0.01                     # ≤ half a quant step

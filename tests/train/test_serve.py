@@ -1,0 +1,55 @@
+"""Serving engine: the decode loop (-s variant) — greedy consistency,
+EOS handling, per-sequence trip counts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import transformer as T
+from repro.serve import GenerateConfig, generate
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-130m",
+                                  "jamba-v0.1-52b"])
+def test_greedy_equals_teacher_forced_argmax(arch, rng):
+    cfg = get_reduced(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jnp.asarray(rng.integers(2, cfg.vocab_size, (3, 8)))
+    gcfg = GenerateConfig(max_new_tokens=10, eos_id=1, temperature=0.0)
+    out, lengths, iters = generate(cfg, params, prompt, gcfg,
+                                   cache_dtype=jnp.float32)
+    full = jnp.concatenate([prompt, out], axis=1)
+    logits, _ = T.forward(cfg, params, {"tokens": full})
+    exp = jnp.argmax(logits[:, 7:-1], axis=-1)
+    for b in range(3):
+        L = int(lengths[b])
+        assert (np.asarray(out[b, :L]) == np.asarray(exp[b, :L])).all()
+
+
+def test_eos_stops_all_lanes_early(rng):
+    cfg = get_reduced("qwen3-1.7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jnp.asarray(rng.integers(2, cfg.vocab_size, (2, 4)))
+    # pick eos = the actually-argmaxed first token so it stops instantly
+    gcfg0 = GenerateConfig(max_new_tokens=4, eos_id=1)
+    out, _, _ = generate(cfg, params, prompt, gcfg0,
+                         cache_dtype=jnp.float32)
+    eos = int(out[0, 0])
+    gcfg = GenerateConfig(max_new_tokens=16, eos_id=eos)
+    out2, lengths, iters = generate(cfg, params, prompt, gcfg,
+                                    cache_dtype=jnp.float32)
+    assert int(lengths[0]) == 1
+    # post-EOS positions are padded with eos
+    assert (np.asarray(out2[0, 1:]) == eos).all()
+
+
+def test_temperature_sampling_is_reproducible(rng):
+    cfg = get_reduced("qwen3-1.7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jnp.asarray(rng.integers(2, cfg.vocab_size, (2, 4)))
+    gcfg = GenerateConfig(max_new_tokens=8, eos_id=1, temperature=0.8,
+                          seed=42)
+    o1, _, _ = generate(cfg, params, prompt, gcfg, cache_dtype=jnp.float32)
+    o2, _, _ = generate(cfg, params, prompt, gcfg, cache_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))

@@ -1,0 +1,150 @@
+"""Trainer integration: learning on the synthetic task, checkpoint
+resume, NaN-fault rollback, fused on-device segments, elastic restore."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.data import SyntheticLM
+from repro.models import transformer as T
+from repro.optim import AdamW, cosine_with_warmup
+from repro.train import Trainer, TrainConfig, checkpoint as C
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("qwen3-1.7b")
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32,
+                       global_batch=8, seed=1)
+    return cfg, data
+
+
+class TestLearning:
+    def test_loss_decreases(self, setup):
+        cfg, data = setup
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        opt = AdamW(lr=cosine_with_warmup(3e-3, 10, 60), weight_decay=0.01)
+        tr = Trainer(cfg, TrainConfig(steps=60, log_every=1000), opt)
+        _, _, info = tr.run(params, lambda s: data.batches(s),
+                            log=lambda *a: None)
+        h = info["history"]
+        assert h[-1] < h[0] - 0.5, (h[0], h[-1])
+
+    def test_grad_accum_invariance(self, setup):
+        """accum=1 and accum=4 compute (nearly) the same gradients."""
+        from repro.train.objective import grad_accum_step
+        cfg, data = setup
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        batch = jax.tree.map(jnp.asarray, data.batch_at(0))
+        g1, l1, _ = grad_accum_step(cfg, params, batch, accum=1)
+        g4, l4, _ = grad_accum_step(cfg, params, batch, accum=4)
+        np.testing.assert_allclose(float(l1), float(l4), rtol=1e-4)
+        flat1 = jax.tree.leaves(g1)
+        flat4 = jax.tree.leaves(g4)
+        for a, b in zip(flat1, flat4):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-4, rtol=2e-3)
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_resume(self, setup):
+        cfg, data = setup
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        opt = AdamW(lr=1e-3)
+        with tempfile.TemporaryDirectory() as d:
+            tr = Trainer(cfg, TrainConfig(steps=12, ckpt_dir=d,
+                                          ckpt_every=5, log_every=100), opt)
+            p1, o1, info1 = tr.run(params, lambda s: data.batches(s),
+                                   log=lambda *a: None)
+            assert C.latest_step(d) == 12
+            # a fresh trainer resumes at 12 and continues to 15
+            tr2 = Trainer(cfg, TrainConfig(steps=15, ckpt_dir=d,
+                                           ckpt_every=100, log_every=100),
+                          opt)
+            fresh = T.init_params(cfg, jax.random.PRNGKey(7))
+            _, _, info2 = tr2.run(fresh, lambda s: data.batches(s),
+                                  log=lambda *a: None)
+            assert info2["steps"] == 15
+
+    def test_bf16_leaves_roundtrip(self):
+        tree = {"a": jnp.ones((4, 3), jnp.bfloat16) * 1.5,
+                "b": {"c": jnp.arange(5, dtype=jnp.int32)},
+                "s": jnp.asarray(3, jnp.int32)}
+        with tempfile.TemporaryDirectory() as d:
+            C.save(d, 3, tree)
+            got, step, _ = C.restore(d, tree)
+            assert step == 3
+            assert got["a"].dtype == jnp.bfloat16
+            np.testing.assert_array_equal(np.asarray(got["a"], np.float32),
+                                          np.asarray(tree["a"], np.float32))
+
+    def test_atomicity_retention(self):
+        tree = {"x": jnp.ones((2,))}
+        with tempfile.TemporaryDirectory() as d:
+            for s in (1, 2, 3, 4, 5):
+                C.save(d, s, tree, keep=2)
+            steps = sorted(os.listdir(d))
+            assert steps == ["step_0000000004", "step_0000000005"]
+
+
+class TestFaultTolerance:
+    def test_nan_rollback_and_batch_skip(self, setup):
+        cfg, data = setup
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        opt = AdamW(lr=1e-3)
+
+        poisoned = {0: False}
+
+        def batches(start):
+            for b in data.batches(start):
+                step = poisoned["n"] = poisoned.get("n", start) + 1
+                if step == 8 and not poisoned[0]:
+                    poisoned[0] = True
+                    b = dict(b)
+                    b["tokens"] = b["tokens"] * 0 + cfg.padded_vocab - 1
+                    # poisoned batch alone isn't NaN; force one via loss:
+                yield b
+
+        # instead of indirect poisoning, inject NaN through params once:
+        class NanOnce(Trainer):
+            count = 0
+
+            def __init__(self, *a, **k):
+                super().__init__(*a, **k)
+                inner = self.train_step
+
+                def wrapped(p, o, b):
+                    NanOnce.count += 1
+                    p2, o2, m = inner(p, o, b)
+                    if NanOnce.count == 6:
+                        m = dict(m)
+                        m["total_loss"] = jnp.asarray(jnp.nan)
+                    return p2, o2, m
+                self.train_step = wrapped
+
+        with tempfile.TemporaryDirectory() as d:
+            tr = NanOnce(cfg, TrainConfig(steps=10, ckpt_dir=d,
+                                          ckpt_every=4, log_every=100),
+                         opt)
+            _, _, info = tr.run(params, lambda s: data.batches(s),
+                                log=lambda *a: None)
+            assert info["faults"] == 1
+            assert info["steps"] == 10           # completed despite fault
+            assert all(np.isfinite(info["history"]))
+
+
+class TestFusedSegment:
+    def test_k_steps_on_device(self, setup):
+        cfg, data = setup
+        params = T.init_params(cfg, jax.random.PRNGKey(2))
+        opt = AdamW(lr=1e-3)
+        tr = Trainer(cfg, TrainConfig(steps=4), opt)
+        stk = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[data.batch_at(i) for i in range(4)])
+        p, o, last_loss, iters = tr.run_fused(params, opt.init(params), stk)
+        assert int(iters) == 4
+        assert np.isfinite(float(last_loss))
