@@ -6,7 +6,9 @@ persistence pays (the paper's best case: 12–20× on K40).
 
 Deployments:
     naive       detect + host-stepped restoration sweeps (D2H each sweep)
-    persistent  detect + the fused on-device restore while_loop
+    persistent  detect + the fused on-device restore while_loop, across
+                the engine backend axis (jnp / pallas persistent-halo /
+                pallas-multistep temporal blocking)
 Also reports restoration quality (PSNR in/out) per noise level —
 reproducing the *behaviour*, not just the timing.
 """
@@ -20,10 +22,11 @@ import numpy as np
 
 from repro.kernels import ops, ref as R
 from repro.kernels.ops import fused_sweep
-from .common import csv_row, time_fn
+from .common import record, time_fn
 
 RES = {"vga": (480, 640), "720p": (720, 1280)}
 MAX_IT = 30
+BACKENDS = (("jnp", 1), ("pallas", 1), ("pallas-multistep", 3))
 
 
 def synth_frame(shape, seed=0):
@@ -61,7 +64,7 @@ def psnr(a, b):
 
 
 def run(resolutions=("vga", "720p"), levels=(0.3, 0.7),
-        frames=8) -> list[str]:
+        frames=8) -> list[dict]:
     rows = []
     for res in resolutions:
         clean = synth_frame(RES[res])
@@ -69,12 +72,13 @@ def run(resolutions=("vga", "720p"), levels=(0.3, 0.7),
             noisy = [jnp.asarray(add_impulse(clean, level, s))
                      for s in range(frames)]
 
-            def persistent():
+            def persistent(backend="jnp", unroll=1):
                 out = None
                 for fr in noisy:
                     mask, repaired = ops.adaptive_median_detect(fr)
                     out, _, _ = ops.restore(repaired, mask,
-                                            max_iters=MAX_IT)
+                                            max_iters=MAX_IT,
+                                            backend=backend, unroll=unroll)
                 return out
 
             def naive():
@@ -85,18 +89,22 @@ def run(resolutions=("vga", "720p"), levels=(0.3, 0.7),
                 return out
 
             t_naive = time_fn(naive, warmup=1, iters=2)
-            t_pers = time_fn(persistent, warmup=1, iters=2)
-            out = persistent()
             tag = f"restore_{res}_{int(level * 100)}pct"
-            rows.append(csv_row(f"{tag}_naive", t_naive,
-                                f"{frames}frames"))
-            rows.append(csv_row(
-                f"{tag}_persistent", t_pers,
-                f"speedup={t_naive / t_pers:.2f}x;"
-                f"psnr {psnr(noisy[0], clean):.1f}->"
-                f"{psnr(out, clean):.1f}dB"))
+            rows.append(record(f"{tag}_naive", t_naive, backend="jnp",
+                               derived=f"{frames}frames"))
+            for backend, unroll in BACKENDS:
+                t_pers = time_fn(persistent, backend, unroll,
+                                 warmup=1, iters=2)
+                out = persistent(backend, unroll)
+                rows.append(record(
+                    f"{tag}_persistent", t_pers, backend=backend,
+                    unroll=unroll,
+                    derived=f"speedup={t_naive / t_pers:.2f}x;"
+                    f"psnr {psnr(noisy[0], clean):.1f}->"
+                    f"{psnr(out, clean):.1f}dB"))
     return rows
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    from .common import csv_row
+    print("\n".join(csv_row(r) for r in run()))

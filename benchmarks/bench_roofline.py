@@ -7,6 +7,8 @@ import glob
 import json
 import os
 
+from .common import record
+
 RUNS = os.environ.get("DRYRUN_DIR", "runs/dryrun")
 
 
@@ -18,39 +20,43 @@ def load(runs_dir=RUNS):
     return recs
 
 
-def run(runs_dir=RUNS) -> list[str]:
+def run(runs_dir=RUNS) -> list[dict]:
     rows = []
     recs = load(runs_dir)
     if not recs:
-        return [f"roofline_missing,-1,(run python -m repro.launch.dryrun "
-                f"--all --mesh both --out {runs_dir})"]
+        return [record("roofline_missing", -1.0,
+                       derived=f"(run python -m repro.launch.dryrun "
+                       f"--all --mesh both --out {runs_dir})")]
     for r in recs:
         if "app" in r:                    # stencil-app dry-run artifact
-            rows.append(
-                f"roofline_stencil_{r['grid']},"
-                f"{max(r['t_compute'], r['t_memory'], r['t_collective']) * 1e6:.1f},"
-                f"tc={r['t_compute'] * 1e3:.3f}ms;tm={r['t_memory'] * 1e3:.3f}ms;"
-                f"tx={r['t_collective'] * 1e3:.3f}ms;iters={r['iters']}")
+            bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+            rows.append(record(
+                f"roofline_stencil_{r['grid']}", bound,
+                derived=f"tc={r['t_compute'] * 1e3:.3f}ms;"
+                f"tm={r['t_memory'] * 1e3:.3f}ms;"
+                f"tx={r['t_collective'] * 1e3:.3f}ms;iters={r['iters']}"))
             continue
         if "arch" not in r:
             continue
         tag = f"{r['arch']}__{r['shape']}__{r['mesh']}"
         if r.get("skipped"):
-            rows.append(f"roofline_{tag},0,SKIP:{r['reason'][:60]}")
+            rows.append(record(f"roofline_{tag}", 0.0,
+                               derived=f"SKIP:{r['reason'][:60]}"))
             continue
         if not r.get("ok"):
-            rows.append(f"roofline_{tag},-1,FAILED")
+            rows.append(record(f"roofline_{tag}", -1.0, derived="FAILED"))
             continue
         rf = r["roofline"]
         bound = max(rf["t_compute"], rf["t_memory"], rf["t_collective"])
-        rows.append(
-            f"roofline_{tag},{bound * 1e6:.1f},"
-            f"dom={rf['dominant']};tc={rf['t_compute'] * 1e3:.2f}ms;"
+        rows.append(record(
+            f"roofline_{tag}", bound,
+            derived=f"dom={rf['dominant']};tc={rf['t_compute'] * 1e3:.2f}ms;"
             f"tm={rf['t_memory'] * 1e3:.2f}ms;"
             f"tx={rf['t_collective'] * 1e3:.2f}ms;"
-            f"useful={rf['useful_ratio']:.2f};frac={rf['fraction']:.4f}")
+            f"useful={rf['useful_ratio']:.2f};frac={rf['fraction']:.4f}"))
     return rows
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    from .common import csv_row
+    print("\n".join(csv_row(r) for r in run()))

@@ -16,17 +16,17 @@ import numpy as np
 
 from repro.core import StreamRunner
 from repro.kernels import ops
-from .common import csv_row, time_fn
+from .common import record, time_fn
 
 
-def run(sizes=(512, 1024, 2048), stream_n=100) -> list[str]:
+def run(sizes=(512, 1024, 2048), stream_n=100) -> list[dict]:
     rows = []
     rng = np.random.default_rng(0)
     jit_sobel = jax.jit(lambda im: ops.sobel(im)[0])
     for size in sizes:
         img = jnp.asarray(rng.uniform(size=(size, size)), jnp.float32)
         t = time_fn(jit_sobel, img)
-        rows.append(csv_row(f"sobel_{size}_single", t))
+        rows.append(record(f"sobel_{size}_single", t, backend="jnp"))
 
     # streaming variant: 100 random images from the size set (paper §4.2)
     imgs = [np.asarray(rng.uniform(size=(512, 512)), np.float32)
@@ -48,12 +48,14 @@ def run(sizes=(512, 1024, 2048), stream_n=100) -> list[str]:
 
     t_item = time_fn(per_item, warmup=1, iters=2)
     t_stream = time_fn(stream, warmup=1, iters=2)
-    rows.append(csv_row(f"sobel_stream{stream_n}_per_item", t_item))
-    rows.append(csv_row(
-        f"sobel_stream{stream_n}_farm", t_stream,
-        f"speedup_vs_per_item={t_item / t_stream:.2f}x"))
+    rows.append(record(f"sobel_stream{stream_n}_per_item", t_item,
+                       backend="jnp"))
+    rows.append(record(
+        f"sobel_stream{stream_n}_farm", t_stream, backend="jnp",
+        derived=f"speedup_vs_per_item={t_item / t_stream:.2f}x"))
     return rows
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    from .common import csv_row
+    print("\n".join(csv_row(r) for r in run()))

@@ -4,11 +4,19 @@ The paper's GPU-vs-CPU columns become structure-vs-structure comparisons
 on this host: the *naïve* deployment (host-driven loop, full D2H+H2D
 round-trip per iteration — the strawman of §3.3) against the *persistent*
 deployment (the Loop-of-stencil-reduce while_loop, device memory
-persistence), and 1-device vs 1:n (subprocess with placeholder devices).
-Wall-clock ratios, not absolute times, carry the claims.
+persistence) across the engine's backend axis, and 1-device vs 1:n
+(subprocess with placeholder devices).  Wall-clock ratios, not absolute
+times, carry the claims.
+
+Every suite emits ``record`` dicts — one per configuration — which the
+harness (:mod:`benchmarks.run`) prints as CSV *and* dumps as
+machine-readable ``BENCH_<suite>.json`` so the perf trajectory is
+tracked across PRs.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
@@ -31,5 +39,43 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
     return float(np.median(ts))
 
 
-def csv_row(name: str, seconds: float, derived: str = "") -> str:
-    return f"{name},{seconds * 1e6:.1f},{derived}"
+def record(name: str, seconds: float, *, backend: str = "", unroll: int = 1,
+           gbps: float | None = None, derived: str = "") -> dict:
+    """One benchmark result row (the JSON schema of BENCH_*.json)."""
+    return {"name": name, "backend": backend, "unroll": unroll,
+            "seconds": seconds,
+            "gbps": None if gbps is None else round(gbps, 3),
+            "derived": derived}
+
+
+def stencil_gbps(size: int, iters: int, seconds: float,
+                 arrays_per_iter: int = 3, bytes_per_cell: int = 4) -> float:
+    """Effective (algorithmic) bandwidth of an iterated 2-D stencil:
+    ``arrays_per_iter`` full-grid HBM streams per iteration (read + write
+    + env by default), regardless of what the backend actually moved —
+    so temporal blocking shows up as *higher* effective GB/s."""
+    return arrays_per_iter * bytes_per_cell * size * size * iters \
+        / max(seconds, 1e-12) / 1e9
+
+
+def csv_row(rec: dict) -> str:
+    """CSV line (``name,us_per_call,derived``) for a record dict."""
+    tags = [t for t in (rec["backend"],
+                        f"T={rec['unroll']}" if rec["unroll"] > 1 else "",
+                        f"{rec['gbps']}GB/s" if rec["gbps"] else "",
+                        rec["derived"]) if t]
+    # negative seconds is the failure sentinel: keep the literal '-1'
+    # the CSV contract (and run.py's own suite-error line) uses
+    us = "-1" if rec["seconds"] < 0 else f"{rec['seconds'] * 1e6:.1f}"
+    return f"{rec['name']},{us},{';'.join(tags)}"
+
+
+def write_json(suite: str, recs, out_dir: str = ".") -> str:
+    """Dump a suite's records as BENCH_<suite>.json; returns the path."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    payload = {"suite": suite, "jax_backend": jax.default_backend(),
+               "records": list(recs)}
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    return path

@@ -1,13 +1,17 @@
 """Benchmark harness — one function per paper table.
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV for eyeballing AND writes one
+machine-readable ``BENCH_<suite>.json`` per suite (schema: name, backend,
+unroll, median seconds, derived GB/s) so the perf trajectory is tracked
+across PRs — diff the JSON, not the stdout.
 
-    Table 1 (Helmholtz)      -> bench_helmholtz
+    Table 1 (Helmholtz)      -> bench_helmholtz   (backend/unroll axis)
     Table 2 (Sobel stream)   -> bench_sobel
-    Table 3 (restoration)    -> bench_restoration
+    Table 3 (restoration)    -> bench_restoration (backend/unroll axis)
     §Roofline (TPU target)   -> bench_roofline (reads runs/dryrun)
 
-``--quick`` shrinks sizes for CI-speed runs.
+``--quick`` shrinks sizes for CI-speed runs; ``--out-dir`` relocates the
+JSON files (default: current directory).
 """
 from __future__ import annotations
 
@@ -21,10 +25,13 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: helmholtz,sobel,restoration,roofline")
+    ap.add_argument("--out-dir", default=".",
+                    help="where BENCH_<suite>.json files are written")
     args = ap.parse_args()
 
     from . import (bench_helmholtz, bench_restoration, bench_roofline,
                    bench_sobel)
+    from .common import csv_row, write_json
 
     suites = {
         "helmholtz": lambda: bench_helmholtz.run(
@@ -44,8 +51,11 @@ def main() -> None:
         if name not in only:
             continue
         try:
-            for row in fn():
-                print(row, flush=True)
+            rows = list(fn())
+            for row in rows:
+                print(csv_row(row), flush=True)
+            path = write_json(name, rows, args.out_dir)
+            print(f"# wrote {path}", file=sys.stderr)
         except Exception as e:  # keep the harness running
             traceback.print_exc(file=sys.stderr)
             print(f"{name}_suite,-1,ERROR:{type(e).__name__}")

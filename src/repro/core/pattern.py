@@ -13,6 +13,16 @@ realisation of the paper's *device memory persistence*: the grid never
 leaves HBM, buffers are swapped by XLA, and (beyond the paper) even the
 convergence reduce + condition stay on device.
 
+The ``backend`` axis picks the loop-body realisation (see
+:mod:`repro.core.executor`): ``"jnp"`` applies the stencil through the
+shift algebra (pad per application); ``"pallas"`` iterates the fused
+Pallas kernel on a *persistent halo frame* — padding and block round-up
+happen once before the loop, the frame is the while-carry, and only the
+O(m+n) ghost ring is re-asserted per sweep; ``"pallas-multistep"``
+additionally fuses ``unroll`` sweeps per HBM round-trip (temporal
+blocking).  Read-only per-cell fields (the paper's ``env``) enter through
+``run(..., env=(...))`` and are staged once alongside the frame.
+
 Loop bodies are *done-masked* so the pattern is ``vmap``-safe: under
 ``farm`` (streaming 1:1 mode) each stream item runs to its own trip count
 while vmap executes until all are done.
@@ -31,6 +41,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from .executor import BACKENDS
 from .reduce import resolve_monoid, tree_reduce
 from .semantics import Boundary
 from .stencil import stencil_taps, stencil_windows, stencil_indexed
@@ -75,7 +86,16 @@ class LoopOfStencilReduce:
               same guard in the iteration-condition plumbing).
     unroll:   check the condition every ``unroll`` stencil applications
               (beyond-paper optimisation: amortises the reduce+condition;
-              may overshoot convergence by < unroll iterations).
+              may overshoot convergence by < unroll iterations).  Under
+              ``backend="pallas-multistep"`` this is also the temporal-
+              blocking depth T (sweeps fused per HBM round-trip).
+    backend:  loop-body realisation — "jnp" (shift algebra), "pallas"
+              (fused kernel on a persistent halo frame), or
+              "pallas-multistep" (temporal blocking).  Pallas backends
+              require ``mode="taps"`` and a 2-D array.
+    block:    Pallas tile shape (clipped to the rounded domain).
+    interpret: force Pallas interpret mode (None = auto: interpret
+              everywhere but TPU).
     """
 
     f: Callable
@@ -91,6 +111,9 @@ class LoopOfStencilReduce:
     boundary: Boundary | str = Boundary.ZERO
     max_iters: int = 10_000
     unroll: int = 1
+    backend: str = "jnp"
+    block: tuple = (256, 256)
+    interpret: Optional[bool] = None
 
     def __post_init__(self):
         self._op, self._id = resolve_monoid(self.combine, self.identity)
@@ -99,16 +122,20 @@ class LoopOfStencilReduce:
             raise ValueError("a termination condition c is required")
         if self.mode not in ("taps", "windows", "indexed", "step"):
             raise ValueError(f"unknown mode {self.mode!r}")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; choose from {BACKENDS}")
 
     # -- single stencil application ------------------------------------
-    def _apply(self, a):
+    def _apply(self, a, env=()):
+        f = self.f if not env else (lambda *args: self.f(*args, *env))
         if self.mode == "taps":
-            return stencil_taps(self.f, a, self.k, self.boundary)
+            return stencil_taps(f, a, self.k, self.boundary)
         if self.mode == "windows":
-            return stencil_windows(self.f, a, self.k, self.boundary)
+            return stencil_windows(f, a, self.k, self.boundary)
         if self.mode == "indexed":
-            return stencil_indexed(self.f, a, self.k, self.boundary)
-        return self.f(a)  # step mode
+            return stencil_indexed(f, a, self.k, self.boundary)
+        return f(a)  # step mode
 
     def _measure(self, a_new, a_old):
         if self.delta is not None:
@@ -130,25 +157,76 @@ class LoopOfStencilReduce:
         return jnp.asarray(c, dtype=bool).reshape(())
 
     # -- the loop --------------------------------------------------------
-    def run(self, a0, state0=None) -> LoopResult:
-        """Execute the pattern on ``a0`` (device-resident end to end)."""
+    def run(self, a0, state0=None, *, env=()) -> LoopResult:
+        """Execute the pattern on ``a0`` (device-resident end to end).
+
+        ``env`` holds read-only per-cell fields passed to ``f`` after its
+        positional arguments (the paper Fig. 2 ``env`` schema).  On the
+        Pallas backends they are staged into device frames once, before
+        the loop.
+        """
         if self.state_init is not None and state0 is None:
             state0 = self.state_init()
+        if self.backend != "jnp":
+            if self.mode != "taps" or getattr(a0, "ndim", None) != 2:
+                raise ValueError(
+                    "pallas backends require mode='taps' and a 2-D array; "
+                    f"got mode={self.mode!r}, "
+                    f"ndim={getattr(a0, 'ndim', None)}")
+            return self._run_persistent(a0, state0, env)
 
         def one_iter(a):
-            """unroll× stencil applications; returns (a_new, a_prev_last)."""
+            """unroll× stencil applications + the fused measure/reduce of
+            the final one (against the second-to-last iterate)."""
             a_prev = a
             for _ in range(self.unroll):
-                a_prev, a = a, self._apply(a)
-            return a, a_prev
+                a_prev, a = a, self._apply(a, env)
+            return a, self._reduce(self._measure(a, a_prev))
+
+        return self._drive(a0, state0, step=one_iter,
+                           state_view=lambda a: a,
+                           finalize=lambda a: a)
+
+    # -- the persistent-halo loop (pallas backends) ----------------------
+    def _run_persistent(self, a0, state0, env) -> LoopResult:
+        """Zero-copy realisation: the halo frame is the while-carry.
+
+        Padding/round-up happens once in ``prepare``; the loop body is
+        kernel sweeps + O(m+n) ghost refresh — no ``jnp.pad`` or full-grid
+        slice per iteration.  The domain is sliced back exactly once after
+        convergence.  (The -s variant's ``state_update`` still sees the
+        (m, n) view each check, which costs a slice — avoid combining a
+        per-iteration state with the persistent backends on hot paths.)
+        """
+        from .executor import StencilEngine
+
+        eng = StencilEngine(
+            f=self.f, k=self.k, boundary=self.boundary,
+            combine=self.combine, identity=self.identity, delta=self.delta,
+            measure=self.measure, block=self.block, unroll=self.unroll,
+            backend=self.backend, interpret=self.interpret)
+        frame0, env_frames, spec = eng.prepare(a0, env)
+        return self._drive(frame0, state0,
+                           step=lambda fr: eng.sweeps(fr, env_frames, spec),
+                           state_view=lambda fr: eng.unframe(fr, spec),
+                           finalize=lambda fr: eng.unframe(fr, spec))
+
+    # -- shared while_loop scaffold (all backends) -----------------------
+    def _drive(self, a0, state0, *, step, state_view, finalize
+               ) -> LoopResult:
+        """The repeat/until driver: ``step(a) -> (a_new, reduced)`` does
+        ``unroll`` stencil applications in whatever representation the
+        backend carries (plain array or halo frame); ``state_view`` maps
+        that representation to what -s state updates see; ``finalize``
+        maps the converged carry to the result array.  Done-masking keeps
+        every backend vmap/farm safe."""
 
         def body(carry):
             a, r, it, s, done = carry
-            a_new, a_prev = one_iter(a)
+            a_new, r_new = step(a)
             it_new = it + self.unroll
-            s_new = (self.state_update(s, a_new, it_new)
+            s_new = (self.state_update(s, state_view(a_new), it_new)
                      if self.state_update is not None else s)
-            r_new = self._reduce(self._measure(a_new, a_prev))
             done_new = self._cond_value(r_new, s_new)
             # done-masking => vmap/farm safe
             keep = lambda old, new: jax.tree.map(
@@ -163,13 +241,12 @@ class LoopOfStencilReduce:
 
         # identity element typed like the actual reduce output so the
         # while_loop carry is type-stable (e.g. bool for the 'any' monoid)
-        r_shape = jax.eval_shape(
-            lambda a: self._reduce(self._measure(a, a)), a0)
+        r_shape = jax.eval_shape(lambda a: step(a)[1], a0)
         r0 = jnp.asarray(self._id, dtype=r_shape.dtype)
         carry0 = (a0, r0, jnp.asarray(0, jnp.int32), state0,
                   jnp.asarray(False))
         a, r, it, s, _ = jax.lax.while_loop(cond_fun, body, carry0)
-        return LoopResult(a=a, reduced=r, iters=it, state=s)
+        return LoopResult(a=finalize(a), reduced=r, iters=it, state=s)
 
     # convenience: a jitted runner
     def jit_run(self, donate: bool = True):
@@ -182,29 +259,31 @@ class LoopOfStencilReduce:
 
 def loop_of_stencil_reduce(k, f, combine, c, a, *, identity=None,
                            boundary="zero", max_iters=10_000, mode="taps",
-                           unroll=1) -> LoopResult:
+                           unroll=1, backend="jnp", env=()) -> LoopResult:
     """LOOP-OF-STENCIL-REDUCE(k, f, ⊕, c, a) — base variant."""
     return LoopOfStencilReduce(
         f=f, k=k, combine=combine, identity=identity, cond=c, mode=mode,
-        boundary=boundary, max_iters=max_iters, unroll=unroll).run(a)
+        boundary=boundary, max_iters=max_iters, unroll=unroll,
+        backend=backend).run(a, env=env)
 
 
 def loop_of_stencil_reduce_d(k, f, delta, combine, c, a, *, identity=None,
                              boundary="zero", max_iters=10_000,
-                             mode="taps", unroll=1) -> LoopResult:
+                             mode="taps", unroll=1, backend="jnp",
+                             env=()) -> LoopResult:
     """-D variant: convergence measured on δ between successive iterates."""
     return LoopOfStencilReduce(
         f=f, k=k, combine=combine, identity=identity, cond=c, delta=delta,
         mode=mode, boundary=boundary, max_iters=max_iters,
-        unroll=unroll).run(a)
+        unroll=unroll, backend=backend).run(a, env=env)
 
 
 def loop_of_stencil_reduce_s(k, f, combine, c, a, *, init, update,
                              identity=None, boundary="zero",
                              max_iters=10_000, mode="taps",
-                             unroll=1) -> LoopResult:
+                             unroll=1, backend="jnp", env=()) -> LoopResult:
     """-S variant: a global state participates in the condition."""
     return LoopOfStencilReduce(
         f=f, k=k, combine=combine, identity=identity, cond=c,
         state_init=init, state_update=update, mode=mode, boundary=boundary,
-        max_iters=max_iters, unroll=unroll).run(a)
+        max_iters=max_iters, unroll=unroll, backend=backend).run(a, env=env)

@@ -11,11 +11,30 @@ shrinking the valid region by k per side per sweep:
     redundant compute ≈ ((bm+2kT)(bn+2kT)/(bm·bn) − 1)          (~13%
     at bm=bn=256, k=1, T=8)
 
-Boundary (⊥) correctness: at global edges the ghost ring must be reset
-to the boundary value after EVERY internal sweep (zero boundary
-supported; a pre-padded initial window alone would let ghost values
-evolve).  The convergence reduce is evaluated on the final sweep only —
-semantically the pattern's ``unroll`` option (checks every T iterations).
+Boundary (⊥) correctness: at global edges the ghost values must match the
+boundary model of the *current* internal iterate after EVERY sweep (a
+pre-padded initial window alone would let ghost values evolve freely).
+Per model:
+
+* ``zero`` / ``nan`` — re-assert the constant on out-of-domain cells
+  (cheap ``where`` over the shrinking window);
+* ``reflect`` — mirror the just-computed interior back onto the ghost
+  cells.  The mirror source always lies inside the current window (depth-d
+  ghost mirrors depth-d interior), realised as flip+roll with a
+  program-id-dependent shift — no gather needed;
+* ``wrap`` — nothing per-sweep: a wrapped ghost ring is a patch of the
+  torus, so ghost cells evolve *exactly* like their pre-images and the
+  shrinking-window containment argument applies unchanged.  (Requires the
+  frame's ghost ring and the env frames to be wrap-filled, which
+  :func:`repro.core.frames.refresh_frame` / ``frame_env`` provide.)
+
+``env`` tiles (the paper Fig. 2 read-only fields) are DMA'd as halo
+windows alongside the state — intermediate sweeps evaluate f on a region
+wider than the output tile, so env must cover the shrinking window at
+every step.  Input DMA is double-buffered (revolving windows) like the
+single-step kernel; the convergence reduce is fused and evaluated on the
+final sweep only — semantically the pattern's ``unroll`` option (checks
+every T iterations).
 
 Validated against T× :func:`repro.core.stencil.stencil_taps` in
 tests/kernels/test_multistep.py.
@@ -23,34 +42,79 @@ tests/kernels/test_multistep.py.
 from __future__ import annotations
 
 import functools
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.frames import frame_spec, make_frame, frame_env, unframe
 from repro.core.reduce import resolve_monoid
-from .stencil2d import KernelTaps, _tile_fold
+from .stencil2d import reduce_epilogue, revolving_fetch
 
 
-def _ms_kernel(x_hbm, o_ref, acc_ref, win, sem, *, f, measure, op,
-               identity, k, T, bm, bn, gm, gn, m, n, acc_dtype):
+def _fix_boundary(cur, row_base, col_base, *, p, m, n, boundary):
+    """Re-assert ⊥ on out-of-domain cells of an internal sweep output.
+
+    ``cur`` holds the sweep output whose [0, 0] cell sits at frame
+    coordinates (row_base, col_base) — traced, tile-dependent.  The domain
+    occupies frame rows [p, p+m) × cols [p, p+n).
+    """
+    if boundary == "wrap":
+        return cur                      # torus continuation is exact
+    L, W = cur.shape
+    rows = row_base + jax.lax.broadcasted_iota(jnp.int32, (L, W), 0)
+    cols = col_base + jax.lax.broadcasted_iota(jnp.int32, (L, W), 1)
+    if boundary in ("zero", "nan"):
+        inside = ((rows >= p) & (rows < p + m)
+                  & (cols >= p) & (cols < p + n))
+        fill = jnp.asarray(0.0 if boundary == "zero" else jnp.nan, cur.dtype)
+        return jnp.where(inside, cur, fill)
+    if boundary != "reflect":
+        raise ValueError(boundary)
+    # reflect: ghost row g < p mirrors row 2p-g; g >= p+m mirrors
+    # 2(p+m-1)-g (jnp.pad 'reflect', no edge repeat).  flip+roll turns the
+    # traced mirror map into a cyclic shift: flip(cur)[l'] = cur[L-1-l'],
+    # so roll(flip(cur), s)[l] = cur[L-1+s-l] — choosing s makes
+    # L-1+s-l the mirror image of row_base+l.  Out-of-range rolls only
+    # land on rows the masks below never select.
+    fr = jnp.flip(cur, axis=0)
+    top = jnp.roll(fr, 2 * (p - row_base) - L + 1, axis=0)
+    bot = jnp.roll(fr, 2 * (p + m - 1 - row_base) - L + 1, axis=0)
+    cur = jnp.where(rows < p, top, jnp.where(rows >= p + m, bot, cur))
+    fc = jnp.flip(cur, axis=1)
+    left = jnp.roll(fc, 2 * (p - col_base) - W + 1, axis=1)
+    right = jnp.roll(fc, 2 * (p + n - 1 - col_base) - W + 1, axis=1)
+    return jnp.where(cols < p, left, jnp.where(cols >= p + n, right, cur))
+
+
+def _ms_kernel(x_hbm, *rest, f, measure, op, identity, k, T, bm, bn,
+               gm, gn, m, n, acc_dtype, boundary, n_env, double_buffer):
+    env_hbm = rest[:n_env]
+    o_hbm, acc_ref, win, wsem = rest[n_env:n_env + 4]
+    tail = rest[n_env + 4:]
+    ewins = tail[:n_env]
+    esem = tail[n_env] if n_env else None
+    ostage, osem = tail[-2:]
+
     i, j = pl.program_id(0), pl.program_id(1)
     t = i * gn + j
     pad = k * T
     wm, wn = bm + 2 * pad, bn + 2 * pad
 
-    cp = pltpu.make_async_copy(
-        x_hbm.at[pl.ds(i * bm, wm), pl.ds(j * bn, wn)], win, sem)
-    cp.start()
-    cp.wait()
+    def window_copies(ti, tj, slot):
+        cps = [pltpu.make_async_copy(
+            x_hbm.at[pl.ds(ti * bm, wm), pl.ds(tj * bn, wn)],
+            win.at[slot], wsem.at[slot])]
+        for e in range(n_env):
+            cps.append(pltpu.make_async_copy(
+                env_hbm[e].at[pl.ds(ti * bm, wm), pl.ds(tj * bn, wn)],
+                ewins[e].at[slot], esem.at[slot, e]))
+        return cps
 
-    # absolute coordinates of the window's top-left cell in the padded
-    # frame; domain cells live at [pad, pad+m) × [pad, pad+n) there
-    row0 = i * bm
-    col0 = j * bn
-
-    cur = win[...]
+    slot = revolving_fetch(t, i, j, gm, gn, window_copies, double_buffer)
+    cur = win[slot]
     prev_center = None
     for step in range(T):
         size_m = wm - 2 * k * (step + 1)
@@ -58,33 +122,24 @@ def _ms_kernel(x_hbm, o_ref, acc_ref, win, sem, *, f, measure, op,
         if step == T - 1:
             prev_center = cur[k:k + size_m, k:k + size_n]
         taps = _ShrinkTaps(cur, k, size_m, size_n)
-        new = f(taps)
-        # re-assert the ⊥=0 boundary on ghost cells outside the domain
-        roff = row0 + k * (step + 1)
-        coff = col0 + k * (step + 1)
-        rows = roff + jax.lax.broadcasted_iota(jnp.int32,
-                                               (size_m, size_n), 0)
-        cols = coff + jax.lax.broadcasted_iota(jnp.int32,
-                                               (size_m, size_n), 1)
-        inside = ((rows >= pad) & (rows < pad + m)
-                  & (cols >= pad) & (cols < pad + n))
-        cur = jnp.where(inside, new, 0.0).astype(cur.dtype)
+        off = k * (step + 1)            # window-local origin of this sweep
+        envs = [ewins[e][slot][off:off + size_m, off:off + size_n]
+                for e in range(n_env)]
+        new = f(taps, *envs)
+        cur = _fix_boundary(
+            new, i * bm + off, j * bn + off, p=pad, m=m, n=n,
+            boundary=boundary).astype(cur.dtype)
 
-    out = cur                                       # (bm, bn)
-    o_ref[...] = out.astype(o_ref.dtype)
+    ostage[...] = cur.astype(ostage.dtype)    # (bm, bn) after T shrinks
+    wr = pltpu.make_async_copy(
+        ostage, o_hbm.at[pl.ds(pad + i * bm, bm), pl.ds(pad + j * bn, bn)],
+        osem)
+    wr.start()
+    wr.wait()
 
-    meas = (measure(out, prev_center) if measure is not None else out)
-    rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
-    cols = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
-    valid = (rows < m) & (cols < n)
-    meas = jnp.where(valid, meas.astype(acc_dtype),
-                     jnp.asarray(identity, acc_dtype))
-    part = _tile_fold(op, meas, identity, acc_dtype)
-
-    @pl.when(t == 0)
-    def _():
-        acc_ref[0, 0] = jnp.asarray(identity, acc_dtype)
-    acc_ref[0, 0] = op(acc_ref[0, 0], part)
+    reduce_epilogue(acc_ref, t, cur, prev_center, measure=measure, op=op,
+                    identity=identity, i=i, j=j, bm=bm, bn=bn, m=m, n=n,
+                    acc_dtype=acc_dtype)
 
 
 class _ShrinkTaps:
@@ -102,39 +157,76 @@ class _ShrinkTaps:
         return self(0, 0)
 
 
-def stencil2d_multistep(a, f, *, k: int = 1, T: int = 4, combine="sum",
-                        identity=None, measure=None,
-                        block=(256, 256), acc_dtype=jnp.float32,
-                        interpret: bool = False):
-    """T fused sweeps per VMEM residency (zero boundary).
+def stencil2d_multistep_framed(frame: jnp.ndarray, f: Callable, spec, *,
+                               T: int, env_framed=(), combine="sum",
+                               identity=None,
+                               measure: Optional[Callable] = None,
+                               boundary: str = "zero",
+                               acc_dtype=jnp.float32,
+                               double_buffer: bool = True,
+                               interpret: bool = False):
+    """T fused sweeps on a persistent halo frame — frame in, frame out.
 
-    Returns (array after T sweeps, /(⊕) of measure(last, second-last)).
+    ``spec`` must have ``pad == k*T``; ``env_framed`` are full-frame fields
+    (``frame_env(..., halo=True)``).  Returns ``(new_frame, reduced)``
+    with the reduce taken over ``measure(last, second-last)`` on the final
+    sweep only.  Like the single-step framed kernel, the output ghost ring
+    is left for the caller's ``refresh_frame``.
     """
     op, ident = resolve_monoid(combine, identity)
-    m, n = a.shape
-    bm, bn = block
-    bm, bn = min(bm, _ceil_mul(m, 8)), min(bn, _ceil_mul(n, 128))
-    gm, gn = -(-m // bm), -(-n // bn)
-    pad = k * T
-    xp = jnp.pad(a, ((pad, pad + gm * bm - m), (pad, pad + gn * bn - n)))
+    k, bm, bn, gm, gn = spec.k, spec.bm, spec.bn, spec.gm, spec.gn
+    assert spec.pad == k * T, (spec.pad, k, T)
+    nbuf = 2 if double_buffer else 1
+    wm, wn = bm + 2 * spec.pad, bn + 2 * spec.pad
+    n_env = len(env_framed)
 
     kernel = functools.partial(
         _ms_kernel, f=f, measure=measure, op=op, identity=ident, k=k,
-        T=T, bm=bm, bn=bn, gm=gm, gn=gn, m=m, n=n, acc_dtype=acc_dtype)
+        T=T, bm=bm, bn=bn, gm=gm, gn=gn, m=spec.m, n=spec.n,
+        acc_dtype=acc_dtype, boundary=boundary, n_env=n_env,
+        double_buffer=double_buffer)
+
+    scratch = [pltpu.VMEM((nbuf, wm, wn), frame.dtype),
+               pltpu.SemaphoreType.DMA((nbuf,))]
+    scratch += [pltpu.VMEM((nbuf, wm, wn), e.dtype) for e in env_framed]
+    if n_env:
+        scratch.append(pltpu.SemaphoreType.DMA((nbuf, n_env)))
+    scratch += [pltpu.VMEM((bm, bn), frame.dtype), pltpu.SemaphoreType.DMA]
+
     out, acc = pl.pallas_call(
         kernel,
         grid=(gm, gn),
-        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
-        out_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)]
+        + [pl.BlockSpec(memory_space=pl.ANY) for _ in env_framed],
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY),
                    pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
-        out_shape=[jax.ShapeDtypeStruct((gm * bm, gn * bn), a.dtype),
+        out_shape=[jax.ShapeDtypeStruct(frame.shape, frame.dtype),
                    jax.ShapeDtypeStruct((1, 1), acc_dtype)],
-        scratch_shapes=[pltpu.VMEM((bm + 2 * pad, bn + 2 * pad), a.dtype),
-                        pltpu.SemaphoreType.DMA],
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(xp)
-    return out[:m, :n], acc[0, 0]
+    )(frame, *env_framed)
+    return out, acc[0, 0]
 
 
-def _ceil_mul(x: int, q: int) -> int:
-    return -(-x // q) * q
+def stencil2d_multistep(a, f, *, env=(), k: int = 1, T: int = 4,
+                        combine="sum", identity=None, measure=None,
+                        boundary: str = "zero", block=(256, 256),
+                        acc_dtype=jnp.float32, double_buffer: bool = True,
+                        interpret: bool = False):
+    """T fused sweeps per VMEM residency, all four ⊥ models, env tiles.
+
+    Returns (array after T sweeps, /(⊕) of measure(last, second-last)).
+    One-shot convenience around :func:`stencil2d_multistep_framed`;
+    iterative callers should hold the frame across kernel calls instead —
+    see :mod:`repro.core.executor`.
+    """
+    m, n = a.shape
+    spec = frame_spec(m, n, k=k, block=block, sweeps=T)
+    frame = make_frame(a, spec, boundary)
+    env_framed = tuple(frame_env(e, spec, boundary, halo=True) for e in env)
+    out, red = stencil2d_multistep_framed(
+        frame, f, spec, T=T, env_framed=env_framed, combine=combine,
+        identity=identity, measure=measure, boundary=boundary,
+        acc_dtype=acc_dtype, double_buffer=double_buffer,
+        interpret=interpret)
+    return unframe(out, spec), red

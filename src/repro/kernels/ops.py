@@ -1,112 +1,109 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public jit'd wrappers around the execution engine (paper §4 apps).
 
-``use_pallas`` toggles between the Pallas kernel (interpret=True on CPU,
-compiled on TPU) and the pure-jnp reference path — both implement the same
-Loop-of-stencil-reduce contract, so the whole framework runs end-to-end on
-either backend.
+Every app here instantiates the Loop-of-stencil-reduce through the
+persistent-halo engine's **backend axis** (:mod:`repro.core.executor`):
+
+* ``backend="jnp"``       — the shift-algebra reference path;
+* ``backend="pallas"``    — the fused single-step kernel iterated on a
+  persistent halo frame (pad/round-up hoisted out of the loop);
+* ``backend="pallas-multistep"`` — temporal blocking, ``unroll`` sweeps
+  fused per HBM round-trip.
+
+``use_pallas`` is kept as a boolean shorthand (False → "jnp",
+True → "pallas"); an explicit ``backend=`` wins.  All paths implement the
+same Loop-of-stencil-reduce contract, so the whole framework runs
+end-to-end on any of them.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from . import ref as R
-from .stencil2d import stencil2d_fused
+from repro.core.executor import sweep_once
+from repro.core.pattern import LoopOfStencilReduce
 
-_ON_TPU = jax.default_backend() == "tpu"
+from . import ref as R
+
+
+def _resolve_backend(use_pallas: bool, backend: Optional[str]) -> str:
+    return backend if backend else ("pallas" if use_pallas else "jnp")
 
 
 def fused_sweep(a, f, *, env=(), k=1, combine="sum", identity=None,
                 measure=None, boundary="zero", block=(256, 256),
-                use_pallas=True, interpret=None, double_buffer=True):
+                use_pallas=True, backend=None, unroll=1, interpret=None,
+                double_buffer=True):
     """One fused stencil+reduce sweep: returns (new, reduced)."""
-    if use_pallas:
-        interp = (not _ON_TPU) if interpret is None else interpret
-        return stencil2d_fused(
-            a, f, env=env, k=k, combine=combine, identity=identity,
-            measure=measure, boundary=boundary, block=block,
-            double_buffer=double_buffer, interpret=interp)
-    return R.stencil2d_fused_ref(a, f, env=env, k=k, combine=combine,
-                                 identity=identity, measure=measure,
-                                 boundary=boundary)
+    return sweep_once(
+        a, f, env=env, k=k, combine=combine, identity=identity,
+        measure=measure, boundary=boundary, block=block,
+        backend=_resolve_backend(use_pallas, backend), unroll=unroll,
+        interpret=interpret, double_buffer=double_buffer)
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "dx", "max_iters",
-                                              "use_pallas"))
+                                             "use_pallas", "backend",
+                                             "unroll"))
 def jacobi_solve(u0, fxy, *, alpha=0.5, dx=1.0 / 512, tol=1e-4,
-                 max_iters=1000, use_pallas=False):
+                 max_iters=1000, use_pallas=False, backend=None, unroll=1):
     """Full Helmholtz Jacobi solve as ONE on-device while_loop (persistent
-    device memory, fused sweep+delta-reduce — the paper's optimised path)."""
-    f = R.helmholtz_jacobi_taps(alpha, dx)
+    device memory, fused sweep+delta-reduce — the paper's optimised path).
 
-    def body(carry):
-        u, delta, it = carry
-        new, d = fused_sweep(u, f, env=(fxy,), k=1, combine="max",
-                             identity=-jnp.inf, measure=R.abs_delta,
-                             boundary="zero", use_pallas=use_pallas)
-        return new, d, it + 1
-
-    def cond(carry):
-        _, delta, it = carry
-        return jnp.logical_and(delta >= tol, it < max_iters)
-
-    u, delta, iters = jax.lax.while_loop(
-        cond, body, (u0, jnp.asarray(jnp.inf, jnp.float32),
-                     jnp.asarray(0, jnp.int32)))
-    return u, delta, iters
+    On the Pallas backends the grid is carried as a persistent halo frame:
+    no per-iteration pad/slice; ``unroll`` with "pallas-multistep" fuses
+    that many sweeps per HBM round-trip (convergence checked every
+    ``unroll`` iterations, as the pattern's unroll semantics).
+    """
+    loop = LoopOfStencilReduce(
+        f=R.helmholtz_jacobi_taps(alpha, dx), k=1, combine="max",
+        cond=lambda r: r < tol, delta=R.abs_delta, boundary="zero",
+        max_iters=max_iters, unroll=unroll,
+        backend=_resolve_backend(use_pallas, backend))
+    res = loop.run(u0, env=(fxy,))
+    return res.a, res.reduced, res.iters
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
-def sobel(img, *, use_pallas=False):
+@functools.partial(jax.jit, static_argnames=("use_pallas", "backend"))
+def sobel(img, *, use_pallas=False, backend=None):
     """Single-iteration stencil (the paper's worst case for accelerators):
     Sobel magnitude + fused max-response reduce (stream statistics)."""
-    new, r = fused_sweep(img, R.sobel_taps(), k=1, combine="max",
-                         identity=-jnp.inf, boundary="reflect",
-                         use_pallas=use_pallas)
+    new, r = sweep_once(img, R.sobel_taps(), k=1, combine="max",
+                        identity=-jnp.inf, boundary="reflect",
+                        backend=_resolve_backend(use_pallas, backend))
     return new, r
 
 
-@functools.partial(jax.jit, static_argnames=("max_iters", "use_pallas"))
+@functools.partial(jax.jit, static_argnames=("max_iters", "use_pallas",
+                                             "backend", "unroll"))
 def restore(frame, noisy_mask, *, beta=2.0, tol=1e-3, max_iters=64,
-            use_pallas=False):
+            use_pallas=False, backend=None, unroll=1):
     """Restoration phase (§4.3): iterate the regularisation sweep until the
     mean absolute update over noisy pixels converges."""
-    f = R.restore_taps(beta)
     npx = jnp.maximum(noisy_mask.sum(), 1.0)
-
-    def body(carry):
-        u, delta, it = carry
-        new, s = fused_sweep(u, f, env=(frame, noisy_mask), k=1,
-                             combine="sum", identity=0.0,
-                             measure=R.abs_delta, boundary="reflect",
-                             use_pallas=use_pallas)
-        return new, s / npx, it + 1
-
-    def cond(carry):
-        _, delta, it = carry
-        return jnp.logical_and(delta >= tol, it < max_iters)
-
-    u, delta, iters = jax.lax.while_loop(
-        cond, body, (frame, jnp.asarray(jnp.inf, jnp.float32),
-                     jnp.asarray(0, jnp.int32)))
-    return u, delta, iters
+    loop = LoopOfStencilReduce(
+        f=R.restore_taps(beta), k=1, combine="sum",
+        cond=lambda r: r / npx < tol, delta=R.abs_delta,
+        boundary="reflect", max_iters=max_iters, unroll=unroll,
+        backend=_resolve_backend(use_pallas, backend))
+    res = loop.run(frame, env=(frame, noisy_mask))
+    return res.a, res.reduced / npx, res.iters
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "kmax"))
-def adaptive_median_detect(frame, *, kmax=3, use_pallas=False):
+@functools.partial(jax.jit, static_argnames=("use_pallas", "kmax",
+                                             "backend"))
+def adaptive_median_detect(frame, *, kmax=3, use_pallas=False, backend=None):
     """Detection phase (§4.3): classic adaptive median filter with window
     escalation 3×3→5×5→7×7.  Returns (noise_mask, repaired_frame) where the
     repaired frame replaces flagged pixels by the AMF median — the
     restoration phase's initial guess."""
+    be = _resolve_backend(use_pallas, backend)
     f_mask, f_repl = R.amf_detect_taps(kmax)
-    mask, frac = fused_sweep(frame, f_mask, k=kmax, combine="sum",
-                             identity=0.0, boundary="reflect",
-                             use_pallas=use_pallas)
-    repl, _ = fused_sweep(frame, f_repl, k=kmax, combine="sum",
-                          identity=0.0, boundary="reflect",
-                          use_pallas=use_pallas)
+    mask, frac = sweep_once(frame, f_mask, k=kmax, combine="sum",
+                            identity=0.0, boundary="reflect", backend=be)
+    repl, _ = sweep_once(frame, f_repl, k=kmax, combine="sum",
+                         identity=0.0, boundary="reflect", backend=be)
     repaired = jnp.where(mask > 0, repl, frame)
     return mask, repaired

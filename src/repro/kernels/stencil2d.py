@@ -5,20 +5,32 @@ phase of the reduce into one kernel — ``stencil<SUM_kernel, MF_kernel>`` —
 so the convergence measure costs no extra memory pass.  TPU-native
 re-thinking of that design:
 
-* the global grid lives in HBM; each grid step DMAs its *halo-extended*
-  (bm+2k, bn+2k) window into VMEM with an explicit async copy
-  (``pltpu.make_async_copy``) — the HBM→VMEM tier replaces the paper's
-  global→local OpenCL memory staging, and the halo comes from the window
-  overlap rather than inter-work-group synchronisation;
+* the global grid lives in HBM as a *persistent halo frame*
+  (:mod:`repro.core.frames`): a (gm·bm + 2k, gn·bn + 2k) array whose ghost
+  ring realises ⊥.  Each grid step DMAs its halo-extended (bm+2k, bn+2k)
+  window into VMEM with an explicit async copy (``pltpu.make_async_copy``)
+  — the HBM→VMEM tier replaces the paper's global→local OpenCL memory
+  staging, and the halo comes from the frame rather than inter-work-group
+  synchronisation;
 * the elemental function runs on the VPU/MXU over the whole VMEM tile
   (data-oriented, vectorised — not thread-oriented as in OpenCL);
+* the output tile is staged in VMEM and DMA'd back **into the same frame
+  layout**, so the frame is a fixed-point type: iterating the kernel needs
+  no per-iteration ``jnp.pad``/slice (two full-grid HBM passes saved on an
+  already memory-bound kernel) — only the O(m+n) ghost refresh between
+  sweeps (:func:`repro.core.frames.refresh_frame`);
 * the per-tile partial reduce accumulates in a VMEM scratch carried across
-  the **sequential TPU grid** (out BlockSpec pinned to (0,0)) — phase one of
+  the **sequential TPU grid** (acc BlockSpec pinned to (0,0)) — phase one of
   the paper's two-phase reduce.  The tiny final combine happens in the jnp
-  wrapper (:mod:`repro.kernels.ops`) and stays on device;
+  wrapper and stays on device;
 * optional **double-buffered DMA** (revolving windows) overlaps the next
   tile's copy with the current tile's compute — the TPU analogue of the
   paper's asynchronous H2D/D2H overlap via OpenCL events.
+
+:func:`stencil2d_fused` keeps the one-shot (m, n) → (m, n) contract by
+framing/unframing around one sweep; :func:`stencil2d_fused_framed` is the
+zero-copy entry point the persistent engine (:mod:`repro.core.executor`)
+iterates inside ``lax.while_loop``.
 
 Validated in interpret mode against :mod:`repro.kernels.ref` (which is built
 on :mod:`repro.core.stencil`, itself property-tested against the formal
@@ -34,6 +46,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.frames import frame_spec, make_frame, frame_env, unframe
 from repro.core.reduce import resolve_monoid
 
 
@@ -53,57 +66,88 @@ class KernelTaps:
         return self(0, 0)
 
 
-def _stencil_kernel(x_hbm, *rest, f, measure, op,
-                    identity, k, bm, bn, gm, gn, m, n, acc_dtype,
-                    double_buffer, n_env):
-    env = rest[:n_env]            # per-cell read-only fields (paper's `env`)
-    o_ref, acc_ref, win, sem = rest[n_env:]
-    i, j = pl.program_id(0), pl.program_id(1)
-    t = i * gn + j
-    nbuf = 2 if double_buffer else 1
-
-    def window_copy(ti, tj, slot):
-        return pltpu.make_async_copy(
-            x_hbm.at[pl.ds(ti * bm, bm + 2 * k), pl.ds(tj * bn, bn + 2 * k)],
-            win.at[slot], sem.at[slot])
-
+def revolving_fetch(t, i, j, gm, gn, make_copies, double_buffer):
+    """Bring tile (i, j)'s windows into VMEM; return the slot they landed
+    in.  ``make_copies(ti, tj, slot)`` builds the async-copy list for one
+    tile.  With double buffering the next tile's copies are kicked off
+    into the other slot before waiting on the current one (revolving
+    windows over the sequential TPU grid).  Shared by the single-step and
+    temporal-blocking kernels."""
     if double_buffer:
         # first tile of the whole grid: kick off slot 0
         @pl.when(t == 0)
         def _():
-            window_copy(i, j, 0).start()
+            for cp in make_copies(i, j, 0):
+                cp.start()
         # prefetch the next tile into the other slot
         nt = t + 1
         ni, nj = nt // gn, nt % gn
 
         @pl.when(nt < gm * gn)
         def _():
-            window_copy(ni, nj, (t + 1) % 2).start()
-        window_copy(i, j, t % 2).wait()
-        w = win[t % 2]
-    else:
-        cp = window_copy(i, j, 0)
+            for cp in make_copies(ni, nj, nt % 2):
+                cp.start()
+        for cp in make_copies(i, j, t % 2):
+            cp.wait()
+        return t % 2
+    cps = make_copies(i, j, 0)
+    for cp in cps:
         cp.start()
+    for cp in cps:
         cp.wait()
-        w = win[0]
+    return 0
 
-    taps = KernelTaps(w, k, bm, bn)
-    new = f(taps, *[e[...] for e in env])
-    o_ref[...] = new.astype(o_ref.dtype)
 
-    # fused partial reduce (phase 1 of the paper's two-phase reduce)
-    meas = measure(new, taps.center) if measure is not None else new
+def reduce_epilogue(acc_ref, t, new, prev_center, *, measure, op, identity,
+                    i, j, bm, bn, m, n, acc_dtype, do_reduce=True):
+    """Fused per-tile partial reduce (phase 1 of the paper's two-phase
+    reduce), accumulated across the sequential grid into ``acc_ref``.
+    Cells beyond the (m, n) domain (block round-up) fold as ⊕'s identity.
+    ``do_reduce=False`` only initialises the accumulator — used on
+    intermediate unrolled sweeps, where the condition is not checked."""
+    @pl.when(t == 0)
+    def _():
+        acc_ref[0, 0] = jnp.asarray(identity, acc_dtype)
+    if not do_reduce:
+        return
+    meas = measure(new, prev_center) if measure is not None else new
     rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
     cols = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
     valid = (rows < m) & (cols < n)
     meas = jnp.where(valid, meas.astype(acc_dtype),
                      jnp.asarray(identity, acc_dtype))
     part = _tile_fold(op, meas, identity, acc_dtype)
-
-    @pl.when(t == 0)
-    def _():
-        acc_ref[0, 0] = jnp.asarray(identity, acc_dtype)
     acc_ref[0, 0] = op(acc_ref[0, 0], part)
+
+
+def _stencil_kernel(x_hbm, *rest, f, measure, op,
+                    identity, k, bm, bn, gm, gn, m, n, acc_dtype,
+                    double_buffer, n_env, do_reduce):
+    env = rest[:n_env]            # per-cell read-only fields (paper's `env`)
+    o_hbm, acc_ref, win, wsem, ostage, osem = rest[n_env:]
+    i, j = pl.program_id(0), pl.program_id(1)
+    t = i * gn + j
+
+    def window_copies(ti, tj, slot):
+        return [pltpu.make_async_copy(
+            x_hbm.at[pl.ds(ti * bm, bm + 2 * k), pl.ds(tj * bn, bn + 2 * k)],
+            win.at[slot], wsem.at[slot])]
+
+    slot = revolving_fetch(t, i, j, gm, gn, window_copies, double_buffer)
+    taps = KernelTaps(win[slot], k, bm, bn)
+    new = f(taps, *[e[...] for e in env])
+
+    # write the tile back into the frame layout (ghost ring untouched —
+    # the engine's O(m+n) refresh re-asserts it between sweeps)
+    ostage[...] = new.astype(ostage.dtype)
+    wr = pltpu.make_async_copy(
+        ostage, o_hbm.at[pl.ds(k + i * bm, bm), pl.ds(k + j * bn, bn)], osem)
+    wr.start()
+    wr.wait()
+
+    reduce_epilogue(acc_ref, t, new, taps.center, measure=measure, op=op,
+                    identity=identity, i=i, j=j, bm=bm, bn=bn, m=m, n=n,
+                    acc_dtype=acc_dtype, do_reduce=do_reduce)
 
 
 def _tile_fold(op, x2d, identity, acc_dtype):
@@ -133,6 +177,55 @@ def _tile_fold(op, x2d, identity, acc_dtype):
     return flat[0]
 
 
+def stencil2d_fused_framed(frame: jnp.ndarray, f: Callable, spec, *,
+                           env_framed=(), combine="sum", identity=None,
+                           measure: Optional[Callable] = None,
+                           acc_dtype=jnp.float32, double_buffer: bool = True,
+                           do_reduce: bool = True, interpret: bool = False):
+    """One fused sweep on a persistent halo frame — frame in, frame out.
+
+    ``frame`` has the layout of ``spec`` (:func:`repro.core.frames.
+    frame_spec` with ``sweeps=1``); ``env_framed`` are block-rounded
+    interior-only fields (:func:`repro.core.frames.frame_env`).  Returns
+    ``(new_frame, reduced_scalar)``; the new frame's ghost ring is
+    *unrefreshed* — callers re-assert it with ``refresh_frame`` before the
+    next sweep.  No full-grid pad or slice happens here: this is the
+    zero-copy loop body.
+
+    ``do_reduce=False`` skips the fused measure+fold (the scalar returned
+    is just ⊕'s identity) — used by the engine on intermediate unrolled
+    sweeps, where the condition is not checked and the reduce would be
+    wasted work.
+    """
+    op, ident = resolve_monoid(combine, identity)
+    k, bm, bn, gm, gn = spec.k, spec.bm, spec.bn, spec.gm, spec.gn
+    nbuf = 2 if double_buffer else 1
+
+    kernel = functools.partial(
+        _stencil_kernel, f=f, measure=measure, op=op, identity=ident,
+        k=k, bm=bm, bn=bn, gm=gm, gn=gn, m=spec.m, n=spec.n,
+        acc_dtype=acc_dtype, double_buffer=double_buffer,
+        n_env=len(env_framed), do_reduce=do_reduce)
+
+    out, acc = pl.pallas_call(
+        kernel,
+        grid=(gm, gn),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)]
+        + [pl.BlockSpec((bm, bn), lambda i, j: (i, j)) for _ in env_framed],
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                   pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct(frame.shape, frame.dtype),
+                   jax.ShapeDtypeStruct((1, 1), acc_dtype)],
+        scratch_shapes=[pltpu.VMEM((nbuf, bm + 2 * k, bn + 2 * k),
+                                   frame.dtype),
+                        pltpu.SemaphoreType.DMA((nbuf,)),
+                        pltpu.VMEM((bm, bn), frame.dtype),
+                        pltpu.SemaphoreType.DMA],
+        interpret=interpret,
+    )(frame, *env_framed)
+    return out, acc[0, 0]
+
+
 def stencil2d_fused(a: jnp.ndarray, f: Callable, *, env=(), k: int = 1,
                     combine="sum", identity=None,
                     measure: Optional[Callable] = None,
@@ -150,46 +243,18 @@ def stencil2d_fused(a: jnp.ndarray, f: Callable, *, env=(), k: int = 1,
     ``env`` holds per-cell read-only fields (the paper Fig. 2 ``env``
     argument — e.g. the Helmholtz forcing matrix, the restoration
     observation+mask); they are tiled like the output, without halo.
+
+    One-shot convenience: frames the input (⊥ padding + block round-up),
+    runs :func:`stencil2d_fused_framed` once, and slices the domain back.
+    Iterative callers should hold the frame across sweeps instead — see
+    :mod:`repro.core.executor`.
     """
-    op, ident = resolve_monoid(combine, identity)
     m, n = a.shape
-    bm, bn = block
-    bm, bn = min(bm, _ceil_mul(m, 8)), min(bn, _ceil_mul(n, 128))
-    gm, gn = -(-m // bm), -(-n // bn)
-
-    # ⊥ padding: k halo + round-up to the block grid (edge fill w/ boundary)
-    pad_m, pad_n = gm * bm - m, gn * bn - n
-    mode = {"zero": ("constant", 0), "nan": ("constant", jnp.nan),
-            "reflect": ("reflect", None), "wrap": ("wrap", None)}[boundary]
-    if mode[0] == "constant":
-        xp = jnp.pad(a, ((k, k + pad_m), (k, k + pad_n)),
-                     constant_values=mode[1])
-    else:
-        xp = jnp.pad(a, ((k, k), (k, k)), mode=mode[0])
-        xp = jnp.pad(xp, ((0, pad_m), (0, pad_n)))  # grid round-up: inert
-    envp = tuple(jnp.pad(e, ((0, pad_m), (0, pad_n))) for e in env)
-    nbuf = 2 if double_buffer else 1
-
-    kernel = functools.partial(
-        _stencil_kernel, f=f, measure=measure, op=op, identity=ident,
-        k=k, bm=bm, bn=bn, gm=gm, gn=gn, m=m, n=n, acc_dtype=acc_dtype,
-        double_buffer=double_buffer, n_env=len(env))
-
-    out, acc = pl.pallas_call(
-        kernel,
-        grid=(gm, gn),
-        in_specs=[pl.BlockSpec(memory_space=pl.ANY)]
-        + [pl.BlockSpec((bm, bn), lambda i, j: (i, j)) for _ in env],
-        out_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-                   pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
-        out_shape=[jax.ShapeDtypeStruct((gm * bm, gn * bn), a.dtype),
-                   jax.ShapeDtypeStruct((1, 1), acc_dtype)],
-        scratch_shapes=[pltpu.VMEM((nbuf, bm + 2 * k, bn + 2 * k), a.dtype),
-                        pltpu.SemaphoreType.DMA((nbuf,))],
-        interpret=interpret,
-    )(xp, *envp)
-    return out[:m, :n], acc[0, 0]
-
-
-def _ceil_mul(x: int, q: int) -> int:
-    return -(-x // q) * q
+    spec = frame_spec(m, n, k=k, block=block)
+    frame = make_frame(a, spec, boundary)
+    env_framed = tuple(frame_env(e, spec, boundary) for e in env)
+    out, red = stencil2d_fused_framed(
+        frame, f, spec, env_framed=env_framed, combine=combine,
+        identity=identity, measure=measure, acc_dtype=acc_dtype,
+        double_buffer=double_buffer, interpret=interpret)
+    return unframe(out, spec), red

@@ -1,4 +1,4 @@
-"""Temporal-blocking kernel ≡ T single sweeps (zero boundary)."""
+"""Temporal-blocking kernel ≡ T single sweeps (all four ⊥ models, env)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -12,6 +12,14 @@ def heat(get, *_):
     lap = (get(-1, 0) + get(1, 0) + get(0, -1) + get(0, 1)
            - 4.0 * get(0, 0))
     return get(0, 0) + 0.1 * lap
+
+
+def lopsided(get, *_):
+    """Mirror-asymmetric stencil: catches boundary models that merely
+    evolve a reflected/wrapped continuation instead of re-asserting ⊥
+    on every internal sweep."""
+    return (0.3 * get(-1, 1) + 0.25 * get(1, 0) + 0.2 * get(0, -1)
+            + 0.25 * get(0, 0))
 
 
 @pytest.mark.parametrize("shape", [(64, 128), (100, 200), (256, 256)])
@@ -29,6 +37,47 @@ def test_T_sweeps_equal_T_single_steps(shape, T, rng):
                                atol=1e-4)
     want_red = float(jnp.max(jnp.abs(want - prev)))
     np.testing.assert_allclose(float(red), want_red, atol=1e-5)
+
+
+@pytest.mark.parametrize("boundary", ["zero", "nan", "reflect", "wrap"])
+@pytest.mark.parametrize("fn", [heat, lopsided])
+def test_all_boundaries_with_env(boundary, fn, rng):
+    """T sweeps ≡ T× stencil_taps for every ⊥ model, with an env field
+    entering f on every internal sweep."""
+    T = 3
+    a = jnp.asarray(rng.normal(size=(48, 160)), jnp.float32)
+    e = jnp.asarray(rng.normal(size=(48, 160)), jnp.float32)
+
+    def f(get, env):
+        return fn(get) + 0.05 * env
+
+    want = a
+    for _ in range(T):
+        prev, want = want, stencil_taps(
+            lambda g: f(g, e), want, 1, boundary)
+    got, red = stencil2d_multistep(
+        a, f, env=(e,), k=1, T=T, combine="max", identity=-jnp.inf,
+        measure=R.abs_delta, boundary=boundary, block=(16, 128),
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5)
+    if boundary != "nan":
+        np.testing.assert_allclose(
+            float(red), float(jnp.max(jnp.abs(want - prev))), atol=1e-5)
+
+
+@pytest.mark.parametrize("double_buffer", [False, True])
+def test_double_buffer_paths_agree(double_buffer, rng):
+    a = jnp.asarray(rng.normal(size=(64, 256)), jnp.float32)
+    got, red = stencil2d_multistep(
+        a, heat, k=1, T=4, combine="max", identity=-jnp.inf,
+        measure=R.abs_delta, boundary="reflect", block=(32, 128),
+        double_buffer=double_buffer, interpret=True)
+    want = a
+    for _ in range(4):
+        prev, want = want, stencil_taps(heat, want, 1, "reflect")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5)
 
 
 def test_arithmetic_intensity_improves():
