@@ -98,13 +98,12 @@ def one_to_n(size: int, n: int = 8) -> float:
         import sys, time
         sys.path.insert(0, %r)
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
         from repro.core import GridPartition, distributed_loop_of_stencil_reduce
         from repro.kernels import ref as R
         rng = np.random.default_rng(0)
         u0 = jnp.zeros((%d, %d), jnp.float32)
         fxy = jnp.asarray(rng.normal(size=(%d, %d)), jnp.float32)
-        mesh = jax.make_mesh((%d,), ("data",), axis_types=(AxisType.Auto,))
+        mesh = jax.make_mesh((%d,), ("data",))
         part = GridPartition(mesh=mesh, axis_names=("data",), array_axes=(0,))
         taps = R.helmholtz_jacobi_taps(%f, %f)
         f = lambda get: taps(get, 0.0)   # forcing folded out for timing
@@ -156,10 +155,10 @@ def run(sizes=(512, 1024, 2048)) -> list[dict]:
             t_1n = one_to_n(size)
             rows.append(record(
                 f"helmholtz_{size}_1to8", t_1n, backend="jnp",
-                gbps=gbps(t_1n),
+                mesh="8x1", gbps=gbps(t_1n),
                 derived=f"speedup_vs_naive={t_naive / t_1n:.2f}x"))
         except Exception as e:   # 1:n needs host-device emulation support
-            rows.append(record(f"helmholtz_{size}_1to8", -1.0,
+            rows.append(record(f"helmholtz_{size}_1to8", -1.0, mesh="8x1",
                                derived=f"ERROR:{type(e).__name__}"))
     return rows
 

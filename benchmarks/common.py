@@ -40,10 +40,16 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
 
 
 def record(name: str, seconds: float, *, backend: str = "", unroll: int = 1,
-           gbps: float | None = None, derived: str = "") -> dict:
-    """One benchmark result row (the JSON schema of BENCH_*.json)."""
+           mesh: str = "1", gbps: float | None = None,
+           derived: str = "") -> dict:
+    """One benchmark result row (the BENCH_summary.json record schema).
+
+    ``mesh`` is the device-mesh axis ("1" = single device, "8x1" = an
+    8-way 1-D decomposition, ...) so the perf trajectory distinguishes
+    deployments, not just backends.
+    """
     return {"name": name, "backend": backend, "unroll": unroll,
-            "seconds": seconds,
+            "mesh": mesh, "seconds": seconds,
             "gbps": None if gbps is None else round(gbps, 3),
             "derived": derived}
 
@@ -62,6 +68,8 @@ def csv_row(rec: dict) -> str:
     """CSV line (``name,us_per_call,derived``) for a record dict."""
     tags = [t for t in (rec["backend"],
                         f"T={rec['unroll']}" if rec["unroll"] > 1 else "",
+                        f"mesh={rec['mesh']}"
+                        if rec.get("mesh", "1") != "1" else "",
                         f"{rec['gbps']}GB/s" if rec["gbps"] else "",
                         rec["derived"]) if t]
     # negative seconds is the failure sentinel: keep the literal '-1'
@@ -70,12 +78,25 @@ def csv_row(rec: dict) -> str:
     return f"{rec['name']},{us},{';'.join(tags)}"
 
 
-def write_json(suite: str, recs, out_dir: str = ".") -> str:
-    """Dump a suite's records as BENCH_<suite>.json; returns the path."""
+SUMMARY_SCHEMA = 1
+
+
+def write_summary(suite_rows: dict, out_dir: str = ".") -> str:
+    """Merge every suite's records into ONE schema-stable
+    BENCH_summary.json (replaces the per-suite BENCH_<suite>.json
+    scatter) — diff this single file across PRs to read the perf
+    trajectory.  ``suite_rows`` maps suite name -> list of record dicts.
+    """
     os.makedirs(out_dir, exist_ok=True)
-    path = os.path.join(out_dir, f"BENCH_{suite}.json")
-    payload = {"suite": suite, "jax_backend": jax.default_backend(),
-               "records": list(recs)}
+    path = os.path.join(out_dir, "BENCH_summary.json")
+    records = []
+    for suite, recs in suite_rows.items():
+        for r in recs:
+            records.append({"suite": suite, **r})
+    payload = {"schema": SUMMARY_SCHEMA,
+               "jax_backend": jax.default_backend(),
+               "records": records}
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=1)
+        fh.write("\n")
     return path

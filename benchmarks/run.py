@@ -1,17 +1,21 @@
 """Benchmark harness — one function per paper table.
 
-Prints ``name,us_per_call,derived`` CSV for eyeballing AND writes one
-machine-readable ``BENCH_<suite>.json`` per suite (schema: name, backend,
-unroll, median seconds, derived GB/s) so the perf trajectory is tracked
-across PRs — diff the JSON, not the stdout.
+Prints ``name,us_per_call,derived`` CSV for eyeballing AND merges every
+suite's records into ONE machine-readable ``BENCH_summary.json``
+(schema: suite, name, backend, mesh, unroll, median seconds, derived
+GB/s) so the perf trajectory is tracked across PRs — diff that single
+file, not the stdout.  The committed repo-root BENCH_summary.json is the
+current baseline.
 
     Table 1 (Helmholtz)      -> bench_helmholtz   (backend/unroll axis)
     Table 2 (Sobel stream)   -> bench_sobel
     Table 3 (restoration)    -> bench_restoration (backend/unroll axis)
+    1:n sharded (§3.4 + CA)  -> bench_sharded (8-device mesh subprocess,
+                                per-iteration time + ppermute rounds)
     §Roofline (TPU target)   -> bench_roofline (reads runs/dryrun)
 
 ``--quick`` shrinks sizes for CI-speed runs; ``--out-dir`` relocates the
-JSON files (default: current directory).
+JSON file (default: current directory).
 """
 from __future__ import annotations
 
@@ -24,14 +28,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: helmholtz,sobel,restoration,roofline")
+                    help="comma list: helmholtz,sobel,restoration,"
+                         "sharded,roofline")
     ap.add_argument("--out-dir", default=".",
-                    help="where BENCH_<suite>.json files are written")
+                    help="where BENCH_summary.json is written")
     args = ap.parse_args()
 
     from . import (bench_helmholtz, bench_restoration, bench_roofline,
-                   bench_sobel)
-    from .common import csv_row, write_json
+                   bench_sharded, bench_sobel)
+    from .common import csv_row, record, write_summary
 
     suites = {
         "helmholtz": lambda: bench_helmholtz.run(
@@ -42,23 +47,29 @@ def main() -> None:
         "restoration": lambda: bench_restoration.run(
             resolutions=("vga",) if args.quick else ("vga", "720p"),
             frames=2 if args.quick else 8),
+        "sharded": lambda: bench_sharded.run(
+            sizes=(256,) if args.quick else (256, 512)),
         "roofline": bench_roofline.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
 
+    all_rows: dict[str, list] = {}
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         if name not in only:
             continue
         try:
             rows = list(fn())
-            for row in rows:
-                print(csv_row(row), flush=True)
-            path = write_json(name, rows, args.out_dir)
-            print(f"# wrote {path}", file=sys.stderr)
         except Exception as e:  # keep the harness running
             traceback.print_exc(file=sys.stderr)
             print(f"{name}_suite,-1,ERROR:{type(e).__name__}")
+            rows = [record(f"{name}_suite", -1.0,
+                           derived=f"ERROR:{type(e).__name__}")]
+        for row in rows:
+            print(csv_row(row), flush=True)
+        all_rows[name] = rows
+    path = write_summary(all_rows, args.out_dir)
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

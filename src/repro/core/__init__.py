@@ -10,7 +10,8 @@ Public API:
 """
 from .semantics import Boundary
 from .stencil import TapAccessor, stencil_taps, stencil_windows, conv_taps
-from .reduce import tree_reduce, two_phase_reduce, MONOIDS
+from .reduce import (tree_reduce, two_phase_reduce, collective_combine,
+                     MONOIDS)
 from .pattern import (LoopOfStencilReduce, LoopResult, loop_of_stencil_reduce,
                       loop_of_stencil_reduce_d, loop_of_stencil_reduce_s)
 from .halo import (GridPartition, exchange_halo,
@@ -19,9 +20,10 @@ from .streaming import pipe, farm, ofarm, sharded_farm, StreamRunner
 
 __all__ = [
     "Boundary", "TapAccessor", "stencil_taps", "stencil_windows",
-    "conv_taps", "tree_reduce", "two_phase_reduce", "MONOIDS",
-    "LoopOfStencilReduce", "LoopResult", "loop_of_stencil_reduce",
-    "loop_of_stencil_reduce_d", "loop_of_stencil_reduce_s", "GridPartition",
-    "exchange_halo", "distributed_loop_of_stencil_reduce", "pipe", "farm",
-    "ofarm", "sharded_farm", "StreamRunner",
+    "conv_taps", "tree_reduce", "two_phase_reduce", "collective_combine",
+    "MONOIDS", "LoopOfStencilReduce", "LoopResult",
+    "loop_of_stencil_reduce", "loop_of_stencil_reduce_d",
+    "loop_of_stencil_reduce_s", "GridPartition", "exchange_halo",
+    "distributed_loop_of_stencil_reduce", "pipe", "farm", "ofarm",
+    "sharded_farm", "StreamRunner",
 ]

@@ -160,3 +160,236 @@ def unframe(frame: jnp.ndarray, spec: FrameSpec) -> jnp.ndarray:
     """Slice the (m, n) domain back out — once, after convergence."""
     p = spec.pad
     return frame[p:p + spec.m, p:p + spec.n]
+
+
+# ---------------------------------------------------------------------------
+# Sharded frames — the 1:n deployment of the persistent-halo engine.
+#
+# Each shard carries its own frame; the ghost ring is re-asserted by a
+# ppermute of O(pad·n) edge strips straight into the neighbour's ring
+# (no concatenate, no jnp.pad, no full-block copy), with the global ⊥
+# model applied locally only on shards that touch the global edge.  With
+# temporal blocking (pad = k·T) one exchange feeds T fused sweeps —
+# the communication-avoiding deep-halo schedule.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedFrameSpec:
+    """Per-shard frame geometry plus its embedding in the device mesh.
+
+    ``local`` is the shard's own :class:`FrameSpec` (``m``/``n`` are the
+    LOCAL domain extents); ``axis_names[ax]`` is the mesh axis that
+    decomposes array axis ``ax`` (None = not decomposed); ``sizes[ax]``
+    its arity.  All functions below run *inside* ``shard_map``.
+    """
+
+    local: FrameSpec
+    axis_names: tuple          # per array axis: mesh axis name or None
+    sizes: tuple               # per array axis: mesh axis arity (1 if local)
+
+    @property
+    def decomposed(self):
+        return tuple(n for n in self.axis_names if n is not None)
+
+
+def sharded_frame_spec(lm: int, ln: int, part, *, k: int = 1,
+                       block=(256, 256), sweeps: int = 1) -> ShardedFrameSpec:
+    """Frame geometry for one shard of an (lm·P, ln·Q) global domain.
+
+    ``part`` carries ``axis_names``/``array_axes`` and the mesh (a
+    :class:`repro.sharding.specs.GridPartition`).  The ghost ring must fit
+    inside the *local* domain (pad = k·sweeps < min(lm, ln)) — deep
+    temporal blocking wants coarse shards.
+    """
+    names = [None, None]
+    sizes = [1, 1]
+    for name, ax in zip(part.axis_names, part.array_axes):
+        if ax not in (0, 1):
+            raise ValueError(f"sharded frames are 2-D; array axis {ax}")
+        names[ax] = name
+        sizes[ax] = part.mesh.shape[name]
+    spec = frame_spec(lm, ln, k=k, block=block, sweeps=sweeps)
+    return ShardedFrameSpec(local=spec, axis_names=tuple(names),
+                            sizes=tuple(sizes))
+
+
+def _axslice(frame, axis, lo, hi, olo, ohi):
+    """Static strip frame[lo:hi] along ``axis``, [olo:ohi] along the other."""
+    idx = [slice(olo, ohi)] * 2
+    idx[axis] = slice(lo, hi)
+    return frame[tuple(idx)]
+
+
+def _axset(frame, axis, lo, hi, olo, ohi, val):
+    idx = [slice(olo, ohi)] * 2
+    idx[axis] = slice(lo, hi)
+    return frame.at[tuple(idx)].set(val)
+
+
+def _refresh_axis_local(frame, spec: FrameSpec, axis: int,
+                        boundary: Boundary, olo: int, ohi: int):
+    """Local ⊥ fill of one axis's ghost strips (non-decomposed axis),
+    restricted to [olo:ohi] along the other axis."""
+    p = spec.pad
+    dom = spec.m if axis == 0 else spec.n
+    d0, d1 = p, p + dom
+    if boundary in (Boundary.ZERO, Boundary.NAN):
+        fill = 0.0 if boundary is Boundary.ZERO else jnp.nan
+        frame = _axset(frame, axis, 0, p, olo, ohi, fill)
+        return _axset(frame, axis, d1, d1 + p, olo, ohi, fill)
+    if boundary is Boundary.REFLECT:
+        lo = jnp.flip(_axslice(frame, axis, d0 + 1, d0 + 1 + p, olo, ohi),
+                      axis=axis)
+        frame = _axset(frame, axis, 0, p, olo, ohi, lo)
+        hi = jnp.flip(_axslice(frame, axis, d1 - 1 - p, d1 - 1, olo, ohi),
+                      axis=axis)
+        return _axset(frame, axis, d1, d1 + p, olo, ohi, hi)
+    if boundary is Boundary.WRAP:
+        frame = _axset(frame, axis, 0, p, olo, ohi,
+                       _axslice(frame, axis, d1 - p, d1, olo, ohi))
+        return _axset(frame, axis, d1, d1 + p, olo, ohi,
+                      _axslice(frame, axis, d0, d0 + p, olo, ohi))
+    raise ValueError(boundary)
+
+
+def _refresh_axis_sharded(frame, sspec: ShardedFrameSpec, axis: int,
+                          boundary: Boundary, olo: int, ohi: int):
+    """ppermute one axis's ghost strips from the mesh neighbours.
+
+    My last ``pad`` domain rows flow "down" into the next shard's leading
+    ghost strip and vice versa — O(pad·width) cells on the wire, written
+    straight into the ring.  Global-edge shards fill the missing side
+    from the ⊥ model (constants / local mirror); WRAP closes the ring so
+    the permutation is total.
+    """
+    spec = sspec.local
+    name = sspec.axis_names[axis]
+    nsh = sspec.sizes[axis]
+    p = spec.pad
+    dom = spec.m if axis == 0 else spec.n
+    d0, d1 = p, p + dom
+
+    fwd = [(i, i + 1) for i in range(nsh - 1)]
+    bwd = [(i + 1, i) for i in range(nsh - 1)]
+    if boundary is Boundary.WRAP:
+        fwd.append((nsh - 1, 0))
+        bwd.append((0, nsh - 1))
+
+    from_prev = jax.lax.ppermute(
+        _axslice(frame, axis, d1 - p, d1, olo, ohi), name, fwd)
+    from_next = jax.lax.ppermute(
+        _axslice(frame, axis, d0, d0 + p, olo, ohi), name, bwd)
+
+    if boundary in (Boundary.ZERO, Boundary.WRAP):
+        pass    # ppermute zero-fills non-receivers; WRAP perms are total
+    else:
+        me = jax.lax.axis_index(name)
+        if boundary is Boundary.NAN:
+            lo_fill = jnp.full_like(from_prev, jnp.nan)
+            hi_fill = jnp.full_like(from_next, jnp.nan)
+        elif boundary is Boundary.REFLECT:
+            lo_fill = jnp.flip(
+                _axslice(frame, axis, d0 + 1, d0 + 1 + p, olo, ohi),
+                axis=axis)
+            hi_fill = jnp.flip(
+                _axslice(frame, axis, d1 - 1 - p, d1 - 1, olo, ohi),
+                axis=axis)
+        else:
+            raise ValueError(boundary)
+        from_prev = jnp.where(me == 0, lo_fill, from_prev)
+        from_next = jnp.where(me == nsh - 1, hi_fill, from_next)
+
+    frame = _axset(frame, axis, 0, p, olo, ohi, from_prev)
+    return _axset(frame, axis, d1, d1 + p, olo, ohi, from_next)
+
+
+def refresh_frame_sharded(frame: jnp.ndarray, sspec: ShardedFrameSpec,
+                          boundary: Boundary | str) -> jnp.ndarray:
+    """Re-assert a sharded frame's ghost ring — the loop-body exchange.
+
+    Axis 0 strips span the domain's column extent; axis 1 strips then run
+    the full frame height, so corner ghosts pick up the diagonal
+    neighbour through the standard two-pass trick (and the local fills
+    compose like ``jnp.pad``'s axis-sequential modes).  Decomposed axes
+    exchange via ppermute; the rest fill locally.
+    """
+    boundary = Boundary(boundary)
+    spec = sspec.local
+    p, ln = spec.pad, spec.n
+    H = spec.shape[0]
+    extents = ((p, p + ln), (0, H))     # pass 1 restricted, pass 2 full
+    for axis in (0, 1):
+        olo, ohi = extents[axis]
+        if sspec.axis_names[axis] is None:
+            frame = _refresh_axis_local(frame, spec, axis, boundary,
+                                        olo, ohi)
+        else:
+            frame = _refresh_axis_sharded(frame, sspec, axis, boundary,
+                                          olo, ohi)
+    return frame
+
+
+def make_frame_sharded(a_local: jnp.ndarray, sspec: ShardedFrameSpec,
+                       boundary: Boundary | str) -> jnp.ndarray:
+    """Embed one shard's block into its frame and refresh the ghosts.
+
+    Runs once per shard, inside ``shard_map``, before the loop.
+    """
+    spec = sspec.local
+    frame = jnp.zeros(spec.shape, a_local.dtype)
+    frame = jax.lax.dynamic_update_slice(frame, a_local,
+                                         (spec.pad, spec.pad))
+    return refresh_frame_sharded(frame, sspec, boundary)
+
+
+def frame_env_sharded(e_local: jnp.ndarray, sspec: ShardedFrameSpec,
+                      boundary: Boundary | str,
+                      halo: bool = False) -> jnp.ndarray:
+    """Stage one shard's slice of a read-only env field, once.
+
+    With ``halo`` (temporal blocking) the ghost strips must hold the
+    *neighbour's* env — intermediate sweeps evaluate f on ghost cells
+    that are real domain cells of the adjacent shard — so the ring is
+    filled by the same ppermute exchange; at global edges the env ghosts
+    are inert (re-asserted each sweep) except under WRAP, which needs the
+    torus continuation, exactly like :func:`frame_env`.
+    """
+    spec = sspec.local
+    if not halo:
+        mi, ni = spec.interior
+        return jnp.pad(e_local, ((0, mi - spec.m), (0, ni - spec.n)))
+    b = Boundary(boundary)
+    frame = jnp.zeros(spec.shape, e_local.dtype)
+    frame = jax.lax.dynamic_update_slice(frame, e_local,
+                                         (spec.pad, spec.pad))
+    return refresh_frame_sharded(
+        frame, sspec, b if b is Boundary.WRAP else Boundary.ZERO)
+
+
+def shard_domain_bounds(sspec: ShardedFrameSpec) -> jnp.ndarray:
+    """(1, 4) int32 ``[row_lo, row_hi, col_lo, col_hi]`` of the GLOBAL
+    domain in this shard's frame coordinates.
+
+    Sides that continue into a neighbour shard get ±2^30 sentinels so the
+    kernel's per-sweep ⊥ re-assertion never fires there — interior ghost
+    cells are real cells of the adjacent shard and must evolve freely
+    (the shrinking-window containment argument).  Traced (axis_index
+    dependent): feeds the kernel through SMEM.
+    """
+    spec = sspec.local
+    big = jnp.int32(2 ** 30)
+    p = spec.pad
+    vals = []
+    for ax, dom in enumerate((spec.m, spec.n)):
+        name = sspec.axis_names[ax]
+        if name is None:
+            lo = jnp.int32(p)
+            hi = jnp.int32(p + dom)
+        else:
+            me = jax.lax.axis_index(name)
+            nsh = sspec.sizes[ax]
+            lo = jnp.where(me == 0, jnp.int32(p), -big)
+            hi = jnp.where(me == nsh - 1, jnp.int32(p + dom), big)
+        vals += [lo, hi]
+    return jnp.stack(vals).astype(jnp.int32).reshape(1, 4)

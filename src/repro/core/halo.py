@@ -7,9 +7,27 @@ mechanism is available (as of OpenCL 2.0)".
 
 On TPU the halo swap is a *nearest-neighbour collective-permute over the ICI
 torus* — a true D2D copy, so this port is strictly cheaper than the paper's
-mechanism.  The convergence reduce becomes a ``psum`` over the grid axes, so
-every shard computes the same condition value and the ``while_loop`` runs
-*inside* ``shard_map``: one XLA program per device, no host in the loop.
+mechanism.  The convergence reduce becomes a monoid collective
+(:func:`repro.core.reduce.collective_combine`) over the grid axes, so every
+shard computes the same condition value and the ``while_loop`` runs *inside*
+``shard_map``: one XLA program per device, no host in the loop.
+
+Two loop-body realisations, both driven by the shared repeat/until scaffold
+:meth:`repro.core.pattern.LoopOfStencilReduce._drive`:
+
+``backend="jnp"``
+    the reference path: per-iteration ``exchange_halo`` grows the local
+    block by 2k (ppermute + concatenate), ⊥-pads the non-decomposed
+    stencil axes, and applies the tap-style f.  General (any ndim, any
+    ``stencil_axes``) but stages a fresh extended block every sweep.
+
+``backend="pallas-sharded"``
+    the persistent path (:class:`repro.core.executor.
+    ShardedStencilEngine`): each shard's while-carry is its halo frame,
+    the exchange writes O(k·n) edge strips straight into the neighbour's
+    ghost ring — no concatenate, no pad, no full-block copy in the loop
+    body — and ``unroll=T`` exchanges a k·T-deep halo once per T fused
+    sweeps (communication-avoiding).  2-D ``taps`` arrays only.
 
 Supports 1-D (by rows) and 2-D (rows × cols) decompositions; corner halos
 propagate through the standard two-pass trick (exchange axis 0 first, then
@@ -17,17 +35,15 @@ exchange the already-extended axis 1).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.sharding.specs import GridPartition, shard_map
 from .pattern import LoopOfStencilReduce, LoopResult
-from .reduce import resolve_monoid, tree_reduce
+from .reduce import collective_combine, resolve_monoid, tree_reduce
 from .semantics import Boundary
 from .stencil import TapAccessor
 
@@ -36,23 +52,6 @@ def _edge(x, axis, lo, hi):
     idx = [slice(None)] * x.ndim
     idx[axis] = slice(lo, hi)
     return x[tuple(idx)]
-
-
-def _pad_axes(a: jnp.ndarray, k: int, axes: Sequence[int],
-              boundary: Boundary) -> jnp.ndarray:
-    """Local ⊥-padding of selected axes (non-decomposed stencil axes)."""
-    if not axes:
-        return a
-    pw = [(k, k) if ax in axes else (0, 0) for ax in range(a.ndim)]
-    if boundary is Boundary.ZERO:
-        return jnp.pad(a, pw, constant_values=0)
-    if boundary is Boundary.NAN:
-        return jnp.pad(a, pw, constant_values=jnp.nan)
-    if boundary is Boundary.REFLECT:
-        return jnp.pad(a, pw, mode="reflect")
-    if boundary is Boundary.WRAP:
-        return jnp.pad(a, pw, mode="wrap")
-    raise ValueError(boundary)
 
 
 def exchange_halo(x: jnp.ndarray, k: int, axis: int, axis_name: str,
@@ -107,93 +106,67 @@ def _apply_prepadded(f_taps: Callable, ext: jnp.ndarray, k: int,
     return f_taps(acc)
 
 
-@dataclasses.dataclass
-class GridPartition:
-    """How the global array maps onto the device mesh (1:n deployment)."""
-    mesh: Mesh
-    axis_names: Sequence[str]        # mesh axes carrying the decomposition
-    array_axes: Sequence[int]        # which array axes they split ("by rows")
-
-    @property
-    def pspec(self) -> P:
-        spec = [None] * (max(self.array_axes) + 1)
-        for name, ax in zip(self.axis_names, self.array_axes):
-            spec[ax] = name
-        return P(*spec)
-
-
 def distributed_loop_of_stencil_reduce(
         f_taps: Callable, combine, cond: Callable, a: jnp.ndarray, *,
         k: int, part: GridPartition, identity=None,
         boundary: Boundary | str = Boundary.ZERO, max_iters: int = 10_000,
         delta: Optional[Callable] = None, unroll: int = 1,
-        stencil_axes: Sequence[int] | None = None) -> LoopResult:
+        stencil_axes: Sequence[int] | None = None, env=(),
+        backend: str = "jnp", block: tuple = (256, 256),
+        interpret: Optional[bool] = None) -> LoopResult:
     """The pattern's 1:n mode: while_loop inside shard_map with halo swaps.
 
-    Every iteration: (1) halo exchange along every decomposed axis
-    (ppermute), (2) local ⊥-padding of the non-decomposed stencil axes,
-    (3) local stencil on the extended block, (4) psum'd global reduce
-    feeding the shared termination condition.
+    ``backend="jnp"`` re-aligns borders per sweep by growing the block
+    (general path); ``backend="pallas-sharded"`` iterates the persistent
+    per-shard frames with strip-wise ppermute refresh and, with
+    ``unroll=T``, one deep exchange per T fused sweeps.  Both share the
+    pattern's repeat/until driver and monoid collectives.
     """
-    op, ident = resolve_monoid(combine, identity)
+    if backend not in ("jnp", "pallas-sharded"):
+        raise ValueError(
+            f"unknown distributed backend {backend!r}; "
+            "choose 'jnp' or 'pallas-sharded'")
     boundary = Boundary(boundary)
+    pat = LoopOfStencilReduce(
+        f=f_taps, k=k, combine=combine, identity=identity, cond=cond,
+        delta=delta, boundary=boundary, max_iters=max_iters, unroll=unroll,
+        backend=backend,
+        partition=part if backend == "pallas-sharded" else None,
+        block=block, interpret=interpret)
+    if backend == "pallas-sharded":
+        return pat.run(a, env=env)
+
+    op, ident = resolve_monoid(combine, identity)
     names = tuple(part.axis_names)
     axes = tuple(part.array_axes)
     st_axes = (tuple(stencil_axes) if stencil_axes is not None
                else tuple(range(a.ndim)))
     local_axes = tuple(ax for ax in st_axes if ax not in axes)
 
-    def local_step(block):
-        ext = block
+    def local_step(block_arr, env_local):
+        ext = block_arr
         for name, ax in zip(names, axes):
             ext = exchange_halo(ext, k, ax, name, boundary)
-        ext = _pad_axes(ext, k, local_axes, boundary)
-        return _apply_prepadded(f_taps, ext, k, st_axes, block.shape)
+        ext = boundary.pad(ext, k, axes=local_axes)
+        return _apply_prepadded(
+            lambda g: f_taps(g, *env_local), ext, k, st_axes,
+            block_arr.shape)
 
-    def sharded_run(block):
-        def body(carry):
-            blk, r, it, done = carry
-            prev = blk
-            new = blk
+    def sharded_run(block_arr, *env_local):
+        def step(blk):
+            prev, new = blk, blk
             for _ in range(unroll):
-                prev, new = new, local_step(new)
-            m = delta(new, prev) if delta is not None else new
-            r_loc = tree_reduce(op, m, ident)
-            r_new = r_loc
-            for name in names:
-                # monoid-aware global combine
-                if op is jnp.maximum:
-                    r_new = lax.pmax(r_new, name)
-                elif op is jnp.minimum:
-                    r_new = lax.pmin(r_new, name)
-                elif op in (jnp.logical_or, jnp.logical_and):
-                    rf = lax.psum(r_new.astype(jnp.float32), name)
-                    r_new = (rf > 0) if op is jnp.logical_or else (
-                        rf >= lax.psum(1.0, name))
-                else:
-                    r_new = lax.psum(r_new, name)
-            it_new = it + unroll
-            done_new = jnp.asarray(cond(r_new), bool).reshape(())
-            blk = jnp.where(done, blk, new)
-            return (blk, jnp.where(done, r, r_new),
-                    jnp.where(done, it, it_new),
-                    jnp.logical_or(done, done_new))
+                prev, new = new, local_step(new, env_local)
+            r_loc = tree_reduce(op, pat._measure(new, prev), ident)
+            return new, collective_combine(op, r_loc, names)
 
-        def cond_fun(carry):
-            _, _, it, done = carry
-            return jnp.logical_and(~done, it < max_iters)
-
-        r0 = jnp.asarray(ident, dtype=jax.eval_shape(
-            lambda b: tree_reduce(op, delta(b, b) if delta else b, ident),
-            block).dtype)
-        out = lax.while_loop(cond_fun, body,
-                             (block, r0, jnp.asarray(0, jnp.int32),
-                              jnp.asarray(False)))
-        blk, r, it, _ = out
-        return blk, r, it
+        res = pat._drive(block_arr, None, step=step,
+                         state_view=lambda b: b, finalize=lambda b: b)
+        return res.a, res.reduced, res.iters
 
     pspec = part.pspec
-    fn = jax.shard_map(sharded_run, mesh=part.mesh, in_specs=(pspec,),
-                       out_specs=(pspec, P(), P()), check_vma=False)
-    blk, r, it = fn(a)
+    fn = shard_map(sharded_run, mesh=part.mesh,
+                   in_specs=(pspec,) * (1 + len(env)),
+                   out_specs=(pspec, P(), P()))
+    blk, r, it = fn(a, *env)
     return LoopResult(a=blk, reduced=r, iters=it, state=None)

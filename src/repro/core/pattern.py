@@ -90,9 +90,15 @@ class LoopOfStencilReduce:
               ``backend="pallas-multistep"`` this is also the temporal-
               blocking depth T (sweeps fused per HBM round-trip).
     backend:  loop-body realisation — "jnp" (shift algebra), "pallas"
-              (fused kernel on a persistent halo frame), or
-              "pallas-multistep" (temporal blocking).  Pallas backends
-              require ``mode="taps"`` and a 2-D array.
+              (fused kernel on a persistent halo frame),
+              "pallas-multistep" (temporal blocking), or "pallas-sharded"
+              (the 1:n deployment: the whole loop inside ``shard_map``,
+              per-shard frames, ppermute ghost exchange, collective
+              reduce; requires ``partition``).  Pallas backends require
+              ``mode="taps"`` and a 2-D array.
+    partition: a :class:`repro.sharding.specs.GridPartition` describing
+              the mesh decomposition — required by (and only meaningful
+              for) ``backend="pallas-sharded"``.
     block:    Pallas tile shape (clipped to the rounded domain).
     interpret: force Pallas interpret mode (None = auto: interpret
               everywhere but TPU).
@@ -112,6 +118,7 @@ class LoopOfStencilReduce:
     max_iters: int = 10_000
     unroll: int = 1
     backend: str = "jnp"
+    partition: Optional[Any] = None
     block: tuple = (256, 256)
     interpret: Optional[bool] = None
 
@@ -125,6 +132,10 @@ class LoopOfStencilReduce:
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {self.backend!r}; choose from {BACKENDS}")
+        if self.backend == "pallas-sharded" and self.partition is None:
+            raise ValueError(
+                "backend='pallas-sharded' needs a partition= "
+                "(repro.sharding.specs.GridPartition)")
 
     # -- single stencil application ------------------------------------
     def _apply(self, a, env=()):
@@ -173,6 +184,8 @@ class LoopOfStencilReduce:
                     "pallas backends require mode='taps' and a 2-D array; "
                     f"got mode={self.mode!r}, "
                     f"ndim={getattr(a0, 'ndim', None)}")
+            if self.backend == "pallas-sharded":
+                return self._run_sharded(a0, state0, env)
             return self._run_persistent(a0, state0, env)
 
         def one_iter(a):
@@ -210,6 +223,52 @@ class LoopOfStencilReduce:
                            step=lambda fr: eng.sweeps(fr, env_frames, spec),
                            state_view=lambda fr: eng.unframe(fr, spec),
                            finalize=lambda fr: eng.unframe(fr, spec))
+
+    # -- the sharded persistent loop (1:n deployment) --------------------
+    def _run_sharded(self, a0, state0, env) -> LoopResult:
+        """The whole repeat/until runs INSIDE ``shard_map``: each shard's
+        while-carry is its local halo frame, the per-check ghost refresh
+        is a ppermute of edge strips, and the fused reduce composes with
+        the monoid collective so every shard evaluates the identical
+        condition — one SPMD program, no host (and no full-block copy)
+        in the loop.
+        """
+        from repro.sharding.specs import shard_map
+        from .executor import ShardedStencilEngine
+
+        if self.state_init is not None or state0 is not None:
+            raise ValueError(
+                "the -s variant is not supported on backend="
+                "'pallas-sharded' (per-shard state views are ambiguous)")
+        part = self.partition
+        for name, ax in zip(part.axis_names, part.array_axes):
+            nsh = part.mesh.shape[name]
+            if a0.shape[ax] % nsh:
+                raise ValueError(
+                    f"array axis {ax} (size {a0.shape[ax]}) must divide "
+                    f"evenly over mesh axis {name!r} (size {nsh})")
+        eng = ShardedStencilEngine(
+            f=self.f, part=part, k=self.k, boundary=self.boundary,
+            combine=self.combine, identity=self.identity, delta=self.delta,
+            measure=self.measure, block=self.block, unroll=self.unroll,
+            interpret=self.interpret)
+
+        def local_run(block, *env_local):
+            frame0, env_frames, sspec = eng.prepare(block, env_local)
+            res = self._drive(
+                frame0, None,
+                step=lambda fr: eng.sweeps(fr, env_frames, sspec),
+                state_view=lambda fr: eng.unframe(fr, sspec),
+                finalize=lambda fr: eng.unframe(fr, sspec))
+            return res.a, res.reduced, res.iters
+
+        from jax.sharding import PartitionSpec as P
+        pspec = part.pspec
+        fn = shard_map(local_run, mesh=part.mesh,
+                       in_specs=(pspec,) * (1 + len(env)),
+                       out_specs=(pspec, P(), P()))
+        a, r, it = fn(a0, *env)
+        return LoopResult(a=a, reduced=r, iters=it, state=None)
 
     # -- shared while_loop scaffold (all backends) -----------------------
     def _drive(self, a0, state0, *, step, state_view, finalize

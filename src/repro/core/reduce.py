@@ -36,6 +36,42 @@ def resolve_monoid(op, identity):
     return op, identity
 
 
+def collective_combine(op: Callable, r: jnp.ndarray,
+                       axis_names) -> jnp.ndarray:
+    """Monoid-aware global combine of per-shard partials over mesh axes.
+
+    The cross-device phase of the paper's two-phase reduce: every shard
+    contributes its local fold and every shard receives the identical
+    global value, so a convergence condition evaluated per-shard agrees
+    everywhere (no host in the loop).  Named monoids map onto the native
+    collective (``psum``/``pmax``/``pmin``); ``any``/``all`` go through a
+    psum of indicator counts; other associative ops must be psum-compatible
+    (i.e. ``op`` must *be* addition-like) — there is no generic
+    all-reduce for arbitrary combinators on the mesh.
+    """
+    from jax import lax
+    for name in axis_names:
+        if op is jnp.maximum or op is jnp.minimum:
+            # XLA's all-reduce max/min DROP NaN (unlike jnp.maximum),
+            # which would silently un-poison a ⊥=NaN convergence measure
+            # on exactly one deployment — re-propagate it explicitly so
+            # every shard sees the same (possibly NaN) value.
+            coll = lax.pmax(r, name) if op is jnp.maximum \
+                else lax.pmin(r, name)
+            if jnp.issubdtype(r.dtype, jnp.floating):
+                nanq = lax.psum(jnp.isnan(r).astype(jnp.float32), name)
+                coll = jnp.where(nanq > 0,
+                                 jnp.asarray(jnp.nan, coll.dtype), coll)
+            r = coll
+        elif op in (jnp.logical_or, jnp.logical_and):
+            rf = lax.psum(r.astype(jnp.float32), name)
+            r = (rf > 0) if op is jnp.logical_or else (
+                rf >= lax.psum(1.0, name))
+        else:
+            r = lax.psum(r, name)
+    return r
+
+
 def tree_reduce(op: Callable, a: jnp.ndarray, identity) -> jnp.ndarray:
     """Balanced-tree fold of the associative ⊕ over all items of ``a``.
 

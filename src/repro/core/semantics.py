@@ -35,15 +35,24 @@ class Boundary(str, enum.Enum):
     REFLECT = "reflect"  # ⊥ := mirrored value   (PDE Neumann-style boundary)
     WRAP = "wrap"        # ⊥ := periodic value   (torus domains)
 
-    def pad(self, a: jnp.ndarray, k: int) -> jnp.ndarray:
+    def pad(self, a: jnp.ndarray, k: int, axes=None) -> jnp.ndarray:
+        """Extend ``a`` by ``k`` ⊥-cells per side along ``axes`` (default:
+        every axis).  The single realisation of the four ⊥ models shared by
+        the semantics oracle, :class:`repro.core.stencil.TapAccessor`, and
+        the distributed halo path (local, non-decomposed axes)."""
+        if axes is None:
+            pw = k
+        else:
+            axes = set(axes)
+            pw = [(k, k) if ax in axes else (0, 0) for ax in range(a.ndim)]
         if self is Boundary.ZERO:
-            return jnp.pad(a, k, mode="constant", constant_values=0)
+            return jnp.pad(a, pw, mode="constant", constant_values=0)
         if self is Boundary.NAN:
-            return jnp.pad(a, k, mode="constant", constant_values=jnp.nan)
+            return jnp.pad(a, pw, mode="constant", constant_values=jnp.nan)
         if self is Boundary.REFLECT:
-            return jnp.pad(a, k, mode="reflect")
+            return jnp.pad(a, pw, mode="reflect")
         if self is Boundary.WRAP:
-            return jnp.pad(a, k, mode="wrap")
+            return jnp.pad(a, pw, mode="wrap")
         raise ValueError(self)
 
 

@@ -36,18 +36,7 @@ class TapAccessor:
                  axes: Sequence[int] | None = None):
         self._k = k
         self._axes = tuple(axes) if axes is not None else tuple(range(a.ndim))
-        pad_width = [(k, k) if ax in self._axes else (0, 0)
-                     for ax in range(a.ndim)]
-        if boundary is Boundary.ZERO:
-            self._p = jnp.pad(a, pad_width, constant_values=0)
-        elif boundary is Boundary.NAN:
-            self._p = jnp.pad(a, pad_width, constant_values=jnp.nan)
-        elif boundary is Boundary.REFLECT:
-            self._p = jnp.pad(a, pad_width, mode="reflect")
-        elif boundary is Boundary.WRAP:
-            self._p = jnp.pad(a, pad_width, mode="wrap")
-        else:
-            raise ValueError(boundary)
+        self._p = Boundary(boundary).pad(a, k, axes=self._axes)
         self._shape = a.shape
 
     def __call__(self, *offsets: int) -> jnp.ndarray:

@@ -57,13 +57,19 @@ def ofarm(worker: Callable, *, lanes_axis: int = 0) -> Callable:
 
 
 def sharded_farm(worker: Callable, mesh: Mesh, axis: str = "data") -> Callable:
-    """Farm whose lanes are spread over a mesh axis (items across devices)."""
-    vw = jax.vmap(worker)
+    """Farm whose lanes are spread over a mesh axis (items across devices).
+
+    The jit wrapper is built ONCE here — constructing ``jax.jit(vw)``
+    inside ``run`` would mint a fresh wrapper (and compilation cache) per
+    call, retracing the worker on every batch (regression-tested by
+    trace counting in tests/core/test_streaming.py).
+    """
+    jvw = jax.jit(jax.vmap(worker))
+    sharding = NamedSharding(mesh, P(axis))
 
     def run(batch):
-        sharding = NamedSharding(mesh, P(axis))
         batch = jax.device_put(batch, sharding)
-        return jax.jit(vw)(batch)
+        return jvw(batch)
     return run
 
 

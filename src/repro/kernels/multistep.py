@@ -51,52 +51,72 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.frames import frame_spec, make_frame, frame_env, unframe
 from repro.core.reduce import resolve_monoid
-from .stencil2d import reduce_epilogue, revolving_fetch
+from .stencil2d import decode_acc, reduce_epilogue, revolving_fetch
 
 
-def _fix_boundary(cur, row_base, col_base, *, p, m, n, boundary):
+def _fix_boundary(cur, row_base, col_base, *, bounds, boundary):
     """Re-assert ⊥ on out-of-domain cells of an internal sweep output.
 
     ``cur`` holds the sweep output whose [0, 0] cell sits at frame
-    coordinates (row_base, col_base) — traced, tile-dependent.  The domain
-    occupies frame rows [p, p+m) × cols [p, p+n).
+    coordinates (row_base, col_base) — traced, tile-dependent.  The
+    GLOBAL domain occupies frame rows [row_lo, row_hi) × cols
+    [col_lo, col_hi), given by ``bounds`` — static ints on the
+    single-device path, traced scalars (read from SMEM) on the sharded
+    path, where interior shards carry ±2^30 sentinels so no cell is ever
+    "outside" (their ghost cells are real neighbour cells and must evolve
+    freely).
     """
     if boundary == "wrap":
         return cur                      # torus continuation is exact
+    row_lo, row_hi, col_lo, col_hi = bounds
     L, W = cur.shape
     rows = row_base + jax.lax.broadcasted_iota(jnp.int32, (L, W), 0)
     cols = col_base + jax.lax.broadcasted_iota(jnp.int32, (L, W), 1)
     if boundary in ("zero", "nan"):
-        inside = ((rows >= p) & (rows < p + m)
-                  & (cols >= p) & (cols < p + n))
+        inside = ((rows >= row_lo) & (rows < row_hi)
+                  & (cols >= col_lo) & (cols < col_hi))
         fill = jnp.asarray(0.0 if boundary == "zero" else jnp.nan, cur.dtype)
         return jnp.where(inside, cur, fill)
     if boundary != "reflect":
         raise ValueError(boundary)
-    # reflect: ghost row g < p mirrors row 2p-g; g >= p+m mirrors
-    # 2(p+m-1)-g (jnp.pad 'reflect', no edge repeat).  flip+roll turns the
-    # traced mirror map into a cyclic shift: flip(cur)[l'] = cur[L-1-l'],
-    # so roll(flip(cur), s)[l] = cur[L-1+s-l] — choosing s makes
-    # L-1+s-l the mirror image of row_base+l.  Out-of-range rolls only
-    # land on rows the masks below never select.
+    # reflect: ghost row g < row_lo mirrors row 2·row_lo - g; g >= row_hi
+    # mirrors 2(row_hi-1) - g (jnp.pad 'reflect', no edge repeat).
+    # flip+roll turns the traced mirror map into a cyclic shift:
+    # flip(cur)[l'] = cur[L-1-l'], so roll(flip(cur), s)[l] = cur[L-1+s-l]
+    # — choosing s makes L-1+s-l the mirror image of row_base+l.
+    # Out-of-range (or sentinel-bound) rolls only land on rows the masks
+    # below never select.
     fr = jnp.flip(cur, axis=0)
-    top = jnp.roll(fr, 2 * (p - row_base) - L + 1, axis=0)
-    bot = jnp.roll(fr, 2 * (p + m - 1 - row_base) - L + 1, axis=0)
-    cur = jnp.where(rows < p, top, jnp.where(rows >= p + m, bot, cur))
+    top = jnp.roll(fr, 2 * (row_lo - row_base) - L + 1, axis=0)
+    bot = jnp.roll(fr, 2 * (row_hi - 1 - row_base) - L + 1, axis=0)
+    cur = jnp.where(rows < row_lo, top,
+                    jnp.where(rows >= row_hi, bot, cur))
     fc = jnp.flip(cur, axis=1)
-    left = jnp.roll(fc, 2 * (p - col_base) - W + 1, axis=1)
-    right = jnp.roll(fc, 2 * (p + n - 1 - col_base) - W + 1, axis=1)
-    return jnp.where(cols < p, left, jnp.where(cols >= p + n, right, cur))
+    left = jnp.roll(fc, 2 * (col_lo - col_base) - W + 1, axis=1)
+    right = jnp.roll(fc, 2 * (col_hi - 1 - col_base) - W + 1, axis=1)
+    return jnp.where(cols < col_lo, left,
+                     jnp.where(cols >= col_hi, right, cur))
 
 
 def _ms_kernel(x_hbm, *rest, f, measure, op, identity, k, T, bm, bn,
-               gm, gn, m, n, acc_dtype, boundary, n_env, double_buffer):
+               gm, gn, m, n, acc_dtype, boundary, n_env, double_buffer,
+               has_bounds):
     env_hbm = rest[:n_env]
-    o_hbm, acc_ref, win, wsem = rest[n_env:n_env + 4]
-    tail = rest[n_env + 4:]
+    pos = n_env
+    if has_bounds:
+        bounds_ref = rest[pos]
+        pos += 1
+    o_hbm, acc_ref, win, wsem = rest[pos:pos + 4]
+    tail = rest[pos + 4:]
     ewins = tail[:n_env]
     esem = tail[n_env] if n_env else None
     ostage, osem = tail[-2:]
+    pad_static = k * T
+    if has_bounds:
+        bounds = (bounds_ref[0, 0], bounds_ref[0, 1],
+                  bounds_ref[0, 2], bounds_ref[0, 3])
+    else:
+        bounds = (pad_static, pad_static + m, pad_static, pad_static + n)
 
     i, j = pl.program_id(0), pl.program_id(1)
     t = i * gn + j
@@ -127,7 +147,7 @@ def _ms_kernel(x_hbm, *rest, f, measure, op, identity, k, T, bm, bn,
                 for e in range(n_env)]
         new = f(taps, *envs)
         cur = _fix_boundary(
-            new, i * bm + off, j * bn + off, p=pad, m=m, n=n,
+            new, i * bm + off, j * bn + off, bounds=bounds,
             boundary=boundary).astype(cur.dtype)
 
     ostage[...] = cur.astype(ostage.dtype)    # (bm, bn) after T shrinks
@@ -162,6 +182,7 @@ def stencil2d_multistep_framed(frame: jnp.ndarray, f: Callable, spec, *,
                                identity=None,
                                measure: Optional[Callable] = None,
                                boundary: str = "zero",
+                               domain_bounds=None,
                                acc_dtype=jnp.float32,
                                double_buffer: bool = True,
                                interpret: bool = False):
@@ -172,6 +193,12 @@ def stencil2d_multistep_framed(frame: jnp.ndarray, f: Callable, spec, *,
     with the reduce taken over ``measure(last, second-last)`` on the final
     sweep only.  Like the single-step framed kernel, the output ghost ring
     is left for the caller's ``refresh_frame``.
+
+    ``domain_bounds`` (optional, (1, 4) int32, possibly traced) overrides
+    where the per-sweep ⊥ re-assertion sees the GLOBAL domain edge in
+    frame coordinates — the sharded deployment passes per-shard bounds
+    (sentinels on interior sides) through SMEM; None keeps the
+    single-device static bounds.
     """
     op, ident = resolve_monoid(combine, identity)
     k, bm, bn, gm, gn = spec.k, spec.bm, spec.bn, spec.gm, spec.gn
@@ -179,12 +206,13 @@ def stencil2d_multistep_framed(frame: jnp.ndarray, f: Callable, spec, *,
     nbuf = 2 if double_buffer else 1
     wm, wn = bm + 2 * spec.pad, bn + 2 * spec.pad
     n_env = len(env_framed)
+    has_bounds = domain_bounds is not None
 
     kernel = functools.partial(
         _ms_kernel, f=f, measure=measure, op=op, identity=ident, k=k,
         T=T, bm=bm, bn=bn, gm=gm, gn=gn, m=spec.m, n=spec.n,
         acc_dtype=acc_dtype, boundary=boundary, n_env=n_env,
-        double_buffer=double_buffer)
+        double_buffer=double_buffer, has_bounds=has_bounds)
 
     scratch = [pltpu.VMEM((nbuf, wm, wn), frame.dtype),
                pltpu.SemaphoreType.DMA((nbuf,))]
@@ -193,19 +221,25 @@ def stencil2d_multistep_framed(frame: jnp.ndarray, f: Callable, spec, *,
         scratch.append(pltpu.SemaphoreType.DMA((nbuf, n_env)))
     scratch += [pltpu.VMEM((bm, bn), frame.dtype), pltpu.SemaphoreType.DMA]
 
+    in_specs = ([pl.BlockSpec(memory_space=pl.ANY)]
+                + [pl.BlockSpec(memory_space=pl.ANY) for _ in env_framed])
+    operands = [frame, *env_framed]
+    if has_bounds:
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        operands.append(jnp.asarray(domain_bounds, jnp.int32))
+
     out, acc = pl.pallas_call(
         kernel,
         grid=(gm, gn),
-        in_specs=[pl.BlockSpec(memory_space=pl.ANY)]
-        + [pl.BlockSpec(memory_space=pl.ANY) for _ in env_framed],
+        in_specs=in_specs,
         out_specs=[pl.BlockSpec(memory_space=pl.ANY),
                    pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
         out_shape=[jax.ShapeDtypeStruct(frame.shape, frame.dtype),
                    jax.ShapeDtypeStruct((1, 1), acc_dtype)],
         scratch_shapes=scratch,
         interpret=interpret,
-    )(frame, *env_framed)
-    return out, acc[0, 0]
+    )(*operands)
+    return out, decode_acc(op, acc[0, 0])
 
 
 def stencil2d_multistep(a, f, *, env=(), k: int = 1, T: int = 4,

@@ -32,6 +32,21 @@ def _resolve_backend(use_pallas: bool, backend: Optional[str]) -> str:
     return backend if backend else ("pallas" if use_pallas else "jnp")
 
 
+def _resolve_sharded_backend(use_pallas: bool, backend: Optional[str],
+                             part) -> str:
+    """Backend resolution for the iterative apps: a mesh partition means
+    the 1:n deployment — refuse a conflicting single-device backend
+    rather than silently ignoring ``part``."""
+    if part is None:
+        return _resolve_backend(use_pallas, backend)
+    if backend not in (None, "pallas-sharded"):
+        raise ValueError(
+            f"part= selects the sharded 1:n deployment; backend="
+            f"{backend!r} conflicts (pass backend='pallas-sharded' or "
+            "drop it)")
+    return "pallas-sharded"
+
+
 def fused_sweep(a, f, *, env=(), k=1, combine="sum", identity=None,
                 measure=None, boundary="zero", block=(256, 256),
                 use_pallas=True, backend=None, unroll=1, interpret=None,
@@ -46,22 +61,27 @@ def fused_sweep(a, f, *, env=(), k=1, combine="sum", identity=None,
 
 @functools.partial(jax.jit, static_argnames=("alpha", "dx", "max_iters",
                                              "use_pallas", "backend",
-                                             "unroll"))
+                                             "unroll", "part"))
 def jacobi_solve(u0, fxy, *, alpha=0.5, dx=1.0 / 512, tol=1e-4,
-                 max_iters=1000, use_pallas=False, backend=None, unroll=1):
+                 max_iters=1000, use_pallas=False, backend=None, unroll=1,
+                 part=None):
     """Full Helmholtz Jacobi solve as ONE on-device while_loop (persistent
     device memory, fused sweep+delta-reduce — the paper's optimised path).
 
     On the Pallas backends the grid is carried as a persistent halo frame:
     no per-iteration pad/slice; ``unroll`` with "pallas-multistep" fuses
     that many sweeps per HBM round-trip (convergence checked every
-    ``unroll`` iterations, as the pattern's unroll semantics).
+    ``unroll`` iterations, as the pattern's unroll semantics).  Passing a
+    ``part`` (:class:`repro.sharding.specs.GridPartition`, hashable →
+    jit-static) selects the 1:n deployment: per-shard frames inside
+    shard_map, ppermute ghost exchange, unroll=T deep halos
+    (``backend`` then defaults to "pallas-sharded").
     """
+    be = _resolve_sharded_backend(use_pallas, backend, part)
     loop = LoopOfStencilReduce(
         f=R.helmholtz_jacobi_taps(alpha, dx), k=1, combine="max",
         cond=lambda r: r < tol, delta=R.abs_delta, boundary="zero",
-        max_iters=max_iters, unroll=unroll,
-        backend=_resolve_backend(use_pallas, backend))
+        max_iters=max_iters, unroll=unroll, backend=be, partition=part)
     res = loop.run(u0, env=(fxy,))
     return res.a, res.reduced, res.iters
 
@@ -77,17 +97,19 @@ def sobel(img, *, use_pallas=False, backend=None):
 
 
 @functools.partial(jax.jit, static_argnames=("max_iters", "use_pallas",
-                                             "backend", "unroll"))
+                                             "backend", "unroll", "part"))
 def restore(frame, noisy_mask, *, beta=2.0, tol=1e-3, max_iters=64,
-            use_pallas=False, backend=None, unroll=1):
+            use_pallas=False, backend=None, unroll=1, part=None):
     """Restoration phase (§4.3): iterate the regularisation sweep until the
-    mean absolute update over noisy pixels converges."""
+    mean absolute update over noisy pixels converges.  ``part`` selects
+    the sharded 1:n deployment, as in :func:`jacobi_solve`."""
+    be = _resolve_sharded_backend(use_pallas, backend, part)
     npx = jnp.maximum(noisy_mask.sum(), 1.0)
     loop = LoopOfStencilReduce(
         f=R.restore_taps(beta), k=1, combine="sum",
         cond=lambda r: r / npx < tol, delta=R.abs_delta,
         boundary="reflect", max_iters=max_iters, unroll=unroll,
-        backend=_resolve_backend(use_pallas, backend))
+        backend=be, partition=part)
     res = loop.run(frame, env=(frame, noisy_mask))
     return res.a, res.reduced / npx, res.iters
 

@@ -117,7 +117,22 @@ def reduce_epilogue(acc_ref, t, new, prev_center, *, measure, op, identity,
     meas = jnp.where(valid, meas.astype(acc_dtype),
                      jnp.asarray(identity, acc_dtype))
     part = _tile_fold(op, meas, identity, acc_dtype)
-    acc_ref[0, 0] = op(acc_ref[0, 0], part)
+    if op in (jnp.logical_or, jnp.logical_and):
+        # bool monoids accumulate as {0,1} indicators in the acc_dtype
+        # scratch (or ≡ max, and ≡ min on {0,1}); decode_acc in the jnp
+        # wrapper turns the scalar back into a bool.
+        acc_op = jnp.maximum if op is jnp.logical_or else jnp.minimum
+        acc_ref[0, 0] = acc_op(acc_ref[0, 0], part.astype(acc_dtype))
+    else:
+        acc_ref[0, 0] = op(acc_ref[0, 0], part)
+
+
+def decode_acc(op, red):
+    """Map the kernel's scalar accumulator back to the monoid's carrier
+    (bool monoids ride through VMEM as {0,1} indicators)."""
+    if op in (jnp.logical_or, jnp.logical_and):
+        return red >= 0.5
+    return red
 
 
 def _stencil_kernel(x_hbm, *rest, f, measure, op,
@@ -223,7 +238,7 @@ def stencil2d_fused_framed(frame: jnp.ndarray, f: Callable, spec, *,
                         pltpu.SemaphoreType.DMA],
         interpret=interpret,
     )(frame, *env_framed)
-    return out, acc[0, 0]
+    return out, decode_acc(op, acc[0, 0])
 
 
 def stencil2d_fused(a: jnp.ndarray, f: Callable, *, env=(), k: int = 1,

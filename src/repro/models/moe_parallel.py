@@ -103,10 +103,11 @@ def expert_parallel_moe(params: Params, x, *, top_k: int, act: str,
         aux = lax.pmean(aux, ep_axis)
         return y.reshape(xb.shape), aux
 
-    y, aux_v = jax.shard_map(
+    from repro.sharding.specs import shard_map
+    y, aux_v = shard_map(
         local_moe, mesh=mesh,
         in_specs=(r_spec, w_spec, w_spec, w_spec, x_spec),
-        out_specs=(x_spec, P()), check_vma=False)(
+        out_specs=(x_spec, P()))(
             params["router"], params["w_gate"], params["w_up"],
             params["w_down"], x)
     if "shared" in params:

@@ -15,13 +15,62 @@ without GSPMD padding.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+
+
+def shard_map(f: Callable, mesh: Mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` without replication checking.
+
+    Newer jax exposes ``jax.shard_map(..., check_vma=)``; 0.4.x has
+    ``jax.experimental.shard_map.shard_map(..., check_rep=)``.  Every
+    SPMD entry point in the repo (halo exchange, sharded engine, MoE
+    dispatch) goes through this shim so the whole tree runs on both.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class GridPartition:
+    """How a global stencil grid maps onto the device mesh (1:n mode).
+
+    Frozen (hashable) so apps can carry it as a jit-static argument.
+    ``axis_names`` are mesh axes; ``array_axes`` the array axes they split
+    ("evenly for 1D array and by rows for 2D matrix", paper §3.4).
+    """
+    mesh: Mesh
+    axis_names: tuple[str, ...]      # mesh axes carrying the decomposition
+    array_axes: tuple[int, ...]      # which array axes they split
+
+    def __post_init__(self):
+        object.__setattr__(self, "axis_names", tuple(self.axis_names))
+        object.__setattr__(self, "array_axes", tuple(self.array_axes))
+
+    @property
+    def pspec(self) -> P:
+        spec = [None] * (max(self.array_axes) + 1)
+        for name, ax in zip(self.axis_names, self.array_axes):
+            spec[ax] = name
+        return P(*spec)
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape[name]
+
+    @property
+    def shards(self) -> tuple[int, ...]:
+        """Decomposition arity per decomposed array axis."""
+        return tuple(self.axis_size(n) for n in self.axis_names)
 
 
 def _div(n: int, k: int) -> bool:

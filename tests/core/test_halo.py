@@ -27,7 +27,6 @@ def run_multidevice(code: str, devices: int = 8) -> str:
 PRELUDE = """
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import *
-from jax.sharding import AxisType
 rng = np.random.default_rng(0)
 b0 = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
 def jac(get, *_):
@@ -43,8 +42,7 @@ solo = LoopOfStencilReduce(f=jac, k=1, combine="max", identity=-jnp.inf,
 class TestDistributedPattern:
     def test_1d_rows_decomposition(self):
         out = run_multidevice(PRELUDE + textwrap.dedent("""
-            mesh = jax.make_mesh((8,), ("data",),
-                                 axis_types=(AxisType.Auto,))
+            mesh = jax.make_mesh((8,), ("data",))
             part = GridPartition(mesh=mesh, axis_names=("data",),
                                  array_axes=(0,))
             dist = distributed_loop_of_stencil_reduce(
@@ -59,8 +57,7 @@ class TestDistributedPattern:
 
     def test_2d_decomposition_with_corners(self):
         out = run_multidevice(PRELUDE + textwrap.dedent("""
-            mesh = jax.make_mesh((4, 2), ("data", "model"),
-                                 axis_types=(AxisType.Auto,)*2)
+            mesh = jax.make_mesh((4, 2), ("data", "model"))
             part = GridPartition(mesh=mesh, axis_names=("data", "model"),
                                  array_axes=(0, 1))
             # k=2 stencil with diagonal (corner) taps
@@ -79,8 +76,7 @@ class TestDistributedPattern:
 
     def test_wrap_boundary_ring_exchange(self):
         out = run_multidevice(PRELUDE + textwrap.dedent("""
-            mesh = jax.make_mesh((8,), ("data",),
-                                 axis_types=(AxisType.Auto,))
+            mesh = jax.make_mesh((8,), ("data",))
             part = GridPartition(mesh=mesh, axis_names=("data",),
                                  array_axes=(0,))
             one = stencil_taps(lambda g: jac(g), b0, 1, "wrap")

@@ -1,0 +1,49 @@
+"""Stream tier regressions: the sharded_farm jit wrapper must be built
+once, not per call (a fresh ``jax.jit`` wrapper per ``run`` call carries a
+fresh compilation cache — every batch retraced and recompiled the
+worker)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import farm, ofarm, pipe, sharded_farm
+
+
+def test_sharded_farm_traces_once():
+    mesh = jax.make_mesh((1,), ("data",))
+    traces = {"n": 0}
+
+    def worker(x):
+        traces["n"] += 1
+        return x * 2.0
+
+    run = sharded_farm(worker, mesh)
+    batch = jnp.arange(8.0).reshape(8, 1)
+    out1 = run(batch)
+    out2 = run(batch)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(batch) * 2)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(batch) * 2)
+    assert traces["n"] == 1, f"worker retraced {traces['n']}x"
+
+
+def test_sharded_farm_new_shape_retraces_same_wrapper():
+    mesh = jax.make_mesh((1,), ("data",))
+    traces = {"n": 0}
+
+    def worker(x):
+        traces["n"] += 1
+        return x + 1.0
+
+    run = sharded_farm(worker, mesh)
+    run(jnp.zeros((4, 2)))
+    run(jnp.zeros((4, 2)))          # cache hit
+    run(jnp.zeros((8, 2)))          # new shape: one more trace
+    assert traces["n"] == 2
+
+
+def test_farm_of_pipe_still_composes():
+    stage = pipe(lambda x: x + 1.0, lambda x: x * 3.0)
+    out = farm(stage)(jnp.ones((4, 2)))
+    np.testing.assert_allclose(np.asarray(out), np.full((4, 2), 6.0))
+    out = ofarm(stage)(jnp.ones((4, 2)))
+    np.testing.assert_allclose(np.asarray(out), np.full((4, 2), 6.0))

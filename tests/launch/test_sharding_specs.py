@@ -8,13 +8,22 @@ from repro.configs import get_config
 from repro.sharding import specs as SH
 
 
+def make_abstract_mesh(sizes, names):
+    # newer jax: AbstractMesh(sizes, names); 0.4.x: one shape_tuple of
+    # (name, size) pairs
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
 @pytest.fixture(scope="module")
 def mesh():
     # spec rules only read mesh.shape / axis_names — a 1-device mesh with
     # logical sizes is enough for unit tests? No: sizes matter. Use the
     # abstract mesh API instead.
-    from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 class TestParamSpecRules:
@@ -72,13 +81,11 @@ class TestZero1:
 
 class TestBatchSpec:
     def test_composes_pod_and_data(self):
-        from jax.sharding import AbstractMesh
-        m = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+        m = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
         spec = SH.batch_spec(m, 256)
         assert spec[0] == ("pod", "data")
 
     def test_batch_one_unsharded(self):
-        from jax.sharding import AbstractMesh
-        m = AbstractMesh((16, 16), ("data", "model"))
+        m = make_abstract_mesh((16, 16), ("data", "model"))
         spec = SH.batch_spec(m, 1)
         assert spec[0] is None

@@ -18,12 +18,11 @@ def test_expert_parallel_matches_dense_dispatch():
         import sys
         sys.path.insert(0, %r)
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P, AxisType
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
         from repro.models.layers import init_moe, moe
         from repro.models.moe_parallel import expert_parallel_moe
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,)*2)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
         E, D, F, topk = 8, 32, 64, 2
         params = init_moe(jax.random.PRNGKey(0), D, E, F, 1, 48, True,
                           jnp.float32)
@@ -61,11 +60,9 @@ def test_expert_parallel_batch_one():
         import sys
         sys.path.insert(0, %r)
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
         from repro.models.layers import init_moe, moe
         from repro.models.moe_parallel import expert_parallel_moe
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,)*2)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
         params = init_moe(jax.random.PRNGKey(0), 32, 8, 64, 0, 0, True,
                           jnp.float32)
         x = jnp.asarray(np.random.default_rng(1).normal(size=(1, 1, 32)),

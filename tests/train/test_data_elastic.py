@@ -80,10 +80,9 @@ def test_elastic_restore_onto_sharded_mesh():
             import sys
             sys.path.insert(0, %r)
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+            from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.train import checkpoint as C
-            mesh = jax.make_mesh((8,), ("data",),
-                                 axis_types=(AxisType.Auto,))
+            mesh = jax.make_mesh((8,), ("data",))
             template = {"w": jnp.zeros((64, 16), jnp.float32),
                         "b": jnp.zeros((16,), jnp.bfloat16)}
             sh = {"w": NamedSharding(mesh, P("data", None)),
