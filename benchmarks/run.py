@@ -12,6 +12,9 @@ current baseline.
     Table 3 (restoration)    -> bench_restoration (backend/unroll axis)
     1:n sharded (§3.4 + CA)  -> bench_sharded (8-device mesh subprocess,
                                 per-iteration time + ppermute rounds)
+    1:1 streaming (§4.2/4.3) -> bench_streaming (lane-slot reuse vs the
+                                per-batch sharded_farm path; items/sec +
+                                host-transfer bytes/item)
     §Roofline (TPU target)   -> bench_roofline (reads runs/dryrun)
 
 ``--quick`` shrinks sizes for CI-speed runs; ``--out-dir`` relocates the
@@ -29,13 +32,13 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: helmholtz,sobel,restoration,"
-                         "sharded,roofline")
+                         "sharded,streaming,roofline")
     ap.add_argument("--out-dir", default=".",
                     help="where BENCH_summary.json is written")
     args = ap.parse_args()
 
     from . import (bench_helmholtz, bench_restoration, bench_roofline,
-                   bench_sharded, bench_sobel)
+                   bench_sharded, bench_sobel, bench_streaming)
     from .common import csv_row, record, write_summary
 
     suites = {
@@ -49,6 +52,10 @@ def main() -> None:
             frames=2 if args.quick else 8),
         "sharded": lambda: bench_sharded.run(
             sizes=(256,) if args.quick else (256, 512)),
+        "streaming": lambda: bench_streaming.run(
+            sizes=(64,) if args.quick else (64, 128),
+            stream_n=16 if args.quick else 32,
+            iters=9),
         "roofline": bench_roofline.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)

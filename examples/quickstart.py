@@ -13,8 +13,9 @@ sys.path.insert(0, "src")
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (LoopOfStencilReduce, farm, loop_of_stencil_reduce,
-                        loop_of_stencil_reduce_d, loop_of_stencil_reduce_s)
+from repro.core import (FarmEngine, LoopOfStencilReduce,
+                        loop_of_stencil_reduce, loop_of_stencil_reduce_d,
+                        loop_of_stencil_reduce_s)
 
 
 def main():
@@ -53,13 +54,33 @@ def main():
     print(f"[Jacobi-s] fixed-budget run stopped at {int(res.iters)} steps")
 
     # -- streaming farm (1:1 mode): items converge independently ----------
+    # farm_run drives the whole batch as ONE done-masked while_loop over
+    # a stacked (lanes, grid) carry — each lane to its own trip count
     runner = LoopOfStencilReduce(
         f=jacobi, k=1, combine="max", identity=-jnp.inf,
         cond=lambda d: d < 1e-4, delta=lambda n, o: jnp.abs(n - o),
         max_iters=5000)
     batch = jnp.stack([u0, u0 * 5.0, u0 * 0.1])
-    out = farm(runner.run)(batch)
+    out = runner.farm_run(batch)
     print(f"[farm]    per-item trip counts: {out.iters.tolist()}")
+
+    # -- FarmEngine: a whole stream through persistent lane slots ---------
+    # backend="pallas" is the point: frames are built once per lane slot
+    # and REFILLED in place with each next item — no re-pad, no re-alloc,
+    # no host round-trip of the frame (interpret-mode kernels on CPU, so
+    # the demo uses a smaller grid + tolerance to stay quick)
+    v0 = u0[:48, :48]
+    streamer = LoopOfStencilReduce(
+        f=jacobi, k=1, combine="max", identity=-jnp.inf,
+        cond=lambda d: d < 1e-2, delta=lambda n, o: jnp.abs(n - o),
+        max_iters=600, backend="pallas", block=(48, 128))
+    eng = FarmEngine(streamer, lanes=2)
+    iters = []
+    n = eng.run([v0 * s for s in (1.0, 5.0, 0.1, 2.0, 0.5)],
+                lambda res: iters.append(int(res.iters)))
+    print(f"[stream]  {n} items through 2 persistent lane slots "
+          f"({eng.stats['rounds']} rounds, backend=pallas); "
+          f"trip counts: {iters}")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,9 @@ Public API:
     reduce      — /(⊕) tree reduce + two-phase reduce
     pattern     — LoopOfStencilReduce + -i/-d/-s variants (lax.while_loop)
     halo        — multi-device 1:n mode (shard_map + ppermute halo swap)
-    streaming   — pipe / farm / ofarm stream tier
+    streaming   — pipe / farm / ofarm stream tier + the lane-resident
+                  FarmEngine (persistent-frame farms, device-side slot
+                  refill, host-side double buffering)
 """
 from .semantics import Boundary
 from .stencil import TapAccessor, stencil_taps, stencil_windows, conv_taps
@@ -16,7 +18,8 @@ from .pattern import (LoopOfStencilReduce, LoopResult, loop_of_stencil_reduce,
                       loop_of_stencil_reduce_d, loop_of_stencil_reduce_s)
 from .halo import (GridPartition, exchange_halo,
                    distributed_loop_of_stencil_reduce)
-from .streaming import pipe, farm, ofarm, sharded_farm, StreamRunner
+from .streaming import (pipe, farm, ofarm, sharded_farm, StreamRunner,
+                        FarmEngine)
 
 __all__ = [
     "Boundary", "TapAccessor", "stencil_taps", "stencil_windows",
@@ -25,5 +28,5 @@ __all__ = [
     "loop_of_stencil_reduce", "loop_of_stencil_reduce_d",
     "loop_of_stencil_reduce_s", "GridPartition", "exchange_halo",
     "distributed_loop_of_stencil_reduce", "pipe", "farm", "ofarm",
-    "sharded_farm", "StreamRunner",
+    "sharded_farm", "StreamRunner", "FarmEngine",
 ]

@@ -47,10 +47,14 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from .frames import (FrameSpec, ShardedFrameSpec, frame_spec, make_frame,
-                     frame_env, frame_env_sharded, make_frame_sharded,
+from .frames import (FrameSpec, LaneFrameSpec, ShardedFrameSpec, ceil_mul,
+                     frame_spec, make_frame, frame_env, frame_env_sharded,
+                     lane_env_frames, make_frame_sharded, make_lane_frames,
+                     refill_lane_env, refill_lane_env_sharded,
+                     refill_lane_frames, refill_lane_frames_sharded,
                      refresh_frame, refresh_frame_sharded,
-                     shard_domain_bounds, sharded_frame_spec, unframe)
+                     shard_domain_bounds, sharded_frame_spec, unframe,
+                     unframe_lanes)
 from .reduce import collective_combine, resolve_monoid
 from .semantics import Boundary
 
@@ -61,6 +65,80 @@ def _default_interpret(interpret: Optional[bool]) -> bool:
     if interpret is None:
         return jax.default_backend() != "tpu"
     return interpret
+
+
+def local_extents(m: int, n: int, part) -> tuple[int, int]:
+    """Per-shard domain extents of an (m, n) grid under ``part`` (a
+    :class:`repro.sharding.specs.GridPartition`); (m, n) when None."""
+    lm, ln = m, n
+    if part is not None:
+        for name, ax in zip(part.axis_names, part.array_axes):
+            nsh = part.mesh.shape[name]
+            if ax == 0:
+                lm = m // nsh
+            elif ax == 1:
+                ln = n // nsh
+    return lm, ln
+
+
+def auto_unroll(m: int, n: int, *, k: int = 1, block=(256, 256),
+                part=None, cap: int = 8,
+                redundancy_limit: float = 1.5) -> int:
+    """Cost-heuristic temporal-blocking depth T for the persistent
+    backends (``unroll="auto"``).
+
+    Each extra fused sweep saves one ghost exchange — a full ICI
+    latency·hop round on the sharded backend (per decomposed mesh axis),
+    an HBM round-trip on "pallas-multistep" — at ~(1 + 2kT/bm)(1 + 2kT/bn)
+    redundant compute per shard.  Exchanges are latency-bound and compute
+    is throughput-bound, so deepening pays until the redundancy factor
+    bites: take the largest T with
+
+    * k·T < min(local m, local n)   (the frame_spec feasibility ceiling —
+      a shard's halo cannot exceed its own domain), and
+    * redundancy ≤ ``redundancy_limit``  (default 1.5: at most half the
+      VPU throughput spent recomputing neighbour cells).
+
+    The mesh shape enters through the LOCAL extents: more shards → smaller
+    local domains → smaller feasible/profitable T, which is exactly the
+    ceiling the ROADMAP notes (8 shards of a 64-row grid cap T at 4·k).
+    """
+    lm, ln = local_extents(m, n, part)
+    if min(lm, ln) <= k:
+        raise ValueError(
+            f"stencil radius k={k} does not fit the local domain "
+            f"({lm}x{ln}): even T=1 needs k < min(local m, n); use a "
+            f"coarser decomposition or a larger grid")
+    bm = min(block[0], ceil_mul(lm, 8))
+    bn = min(block[1], ceil_mul(ln, 128))
+    best = 1
+    for T in range(1, cap + 1):
+        if k * T >= min(lm, ln):
+            break
+        if (1 + 2 * k * T / bm) * (1 + 2 * k * T / bn) > redundancy_limit:
+            break
+        best = T
+    return best
+
+
+def check_unroll_feasible(m: int, n: int, unroll: int, *, k: int = 1,
+                          part=None) -> None:
+    """Loud feasibility check for an explicit ``unroll=T`` — raises with
+    the mesh context and the feasible ceiling instead of letting
+    ``frame_spec`` fail with local-only numbers deep inside shard_map."""
+    lm, ln = local_extents(m, n, part)
+    if k * unroll < min(lm, ln):
+        return
+    tmax = max((min(lm, ln) - 1) // k, 0)
+    where = (f"each of the {tuple(part.shards)} shards holds a local "
+             f"{lm}x{ln} block of the {m}x{n} grid" if part is not None
+             else f"the {m}x{n} grid")
+    raise ValueError(
+        f"unroll={unroll} is infeasible: the k*T={k * unroll}-deep halo "
+        f"must fit inside the local domain, but {where} "
+        f"(k*T < min(local m, n) = {min(lm, ln)} requires T <= {tmax}). "
+        f"Lower unroll, pass unroll='auto', or use a coarser "
+        f"decomposition.")
 
 
 @dataclasses.dataclass
@@ -147,6 +225,56 @@ class StencilEngine:
     def unframe(self, frame: jnp.ndarray, spec: FrameSpec) -> jnp.ndarray:
         """Slice the domain back out — once, after convergence."""
         return unframe(frame, spec)
+
+    # -- the lane axis (1:1 streaming farm) ------------------------------
+    @property
+    def _halo_env(self) -> bool:
+        return self.backend == "pallas-multistep"
+
+    def lane_spec(self, lanes: int, m: int, n: int) -> LaneFrameSpec:
+        """Frame geometry for ``lanes`` independent (m, n) stream items."""
+        spec = frame_spec(m, n, k=self.k, block=self.block,
+                          sweeps=self.unroll if self._halo_env else 1)
+        return LaneFrameSpec(lanes=lanes, frame=spec)
+
+    def prepare_lanes(self, a: jnp.ndarray, env=()):
+        """Stage a (lanes, m, n) stack into lane frames — one-shot entry
+        (:meth:`refill_lanes` is the streaming path that reuses slots)."""
+        lanes, m, n = a.shape
+        lspec = self.lane_spec(lanes, m, n)
+        frames = make_lane_frames(a, lspec.frame, self.boundary)
+        env_frames = tuple(
+            lane_env_frames(e, lspec.frame, self.boundary,
+                            halo=self._halo_env) for e in env)
+        return frames, env_frames, lspec
+
+    def refill_lanes(self, frames, env_frames, interiors, env_new,
+                     lspec: LaneFrameSpec):
+        """Refill the lane slots in place with the next stream items —
+        O(interior) writes + O(m+n) ghost refresh per lane; no pad, no
+        re-framing, no new allocation (donate the buffers under jit)."""
+        frames = refill_lane_frames(frames, interiors, lspec.frame,
+                                    self.boundary)
+        env_frames = tuple(
+            refill_lane_env(ef, e, lspec.frame, self.boundary,
+                            halo=self._halo_env)
+            for ef, e in zip(env_frames, env_new))
+        return frames, env_frames
+
+    def sweeps_lanes(self, frames, env_frames, lspec: LaneFrameSpec):
+        """``unroll`` sweeps on every lane; returns (frames', (lanes,) r).
+
+        One vmapped kernel launch covers the whole farm — the lane axis
+        becomes an extra TPU grid dimension, not a Python loop.
+        """
+        return jax.vmap(
+            lambda fr, *efs: self.sweeps(fr, tuple(efs), lspec.frame)
+        )(frames, *env_frames)
+
+    def unframe_lanes(self, frames, lspec: LaneFrameSpec):
+        """Slice every lane's domain back out — the only per-item O(m·n)
+        device→host candidate of the streaming path (the frames stay)."""
+        return unframe_lanes(frames, lspec.frame)
 
 
 @dataclasses.dataclass
@@ -236,6 +364,55 @@ class ShardedStencilEngine:
                 sspec: ShardedFrameSpec) -> jnp.ndarray:
         """Slice this shard's local domain back out, after convergence."""
         return unframe(frame, sspec.local)
+
+    # -- the lane axis (lanes × spatial decomposition) -------------------
+    # All lane methods run inside ``shard_map`` with the partition's mesh
+    # axes bound; the lane stack holds this shard's LOCAL lanes and the
+    # vmap batches the ppermute exchange + monoid collective per lane.
+
+    def lane_sspec(self, lm: int, ln: int) -> ShardedFrameSpec:
+        """Per-shard frame geometry for one lane's local (lm, ln) block."""
+        return sharded_frame_spec(
+            lm, ln, self.part, k=self.k, block=self.block,
+            sweeps=self.unroll if self._multistep else 1)
+
+    def prepare_lanes(self, a_local: jnp.ndarray, env_local=()):
+        """Stage this shard's (lanes, lm, ln) stack into lane frames."""
+        _, lm, ln = a_local.shape
+        sspec = self.lane_sspec(lm, ln)
+        frames = jax.vmap(
+            lambda b: make_frame_sharded(b, sspec, self.boundary))(a_local)
+        env_frames = tuple(
+            jax.vmap(lambda e: frame_env_sharded(
+                e, sspec, self.boundary, halo=self._multistep))(e)
+            for e in env_local)
+        return frames, env_frames, sspec
+
+    def refill_lanes(self, frames, env_frames, interiors, env_new,
+                     sspec: ShardedFrameSpec):
+        """In-place lane-slot refill with this shard's next local blocks."""
+        frames = refill_lane_frames_sharded(frames, interiors, sspec,
+                                            self.boundary)
+        env_frames = tuple(
+            refill_lane_env_sharded(ef, e, sspec, self.boundary,
+                                    halo=self._multistep)
+            for ef, e in zip(env_frames, env_new))
+        return frames, env_frames
+
+    def sweeps_lanes(self, frames, env_frames, sspec: ShardedFrameSpec):
+        """``unroll`` sweeps + ONE lane-batched ghost exchange + the
+        global combine; returns (frames', (local_lanes,) r).  The combine
+        makes r identical across the spatial shards of each lane, so a
+        lane-done condition stays SPMD-uniform within its exchange group
+        (the while trip counts may diverge across LANE shards — there are
+        no collectives along the lane axis)."""
+        return jax.vmap(
+            lambda fr, *efs: self.sweeps(fr, tuple(efs), sspec)
+        )(frames, *env_frames)
+
+    def unframe_lanes(self, frames, sspec: ShardedFrameSpec):
+        """Slice every local lane's domain back out."""
+        return unframe_lanes(frames, sspec.local)
 
 
 def sweep_once(a, f, *, env=(), k=1, combine="sum", identity=None,

@@ -163,6 +163,99 @@ def unframe(frame: jnp.ndarray, spec: FrameSpec) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Lane-stacked frames — the 1:1 streaming deployment of the engine.
+#
+# A farm of convergence loops shares ONE done-masked while_loop whose
+# carry is a stack of frames, one per lane *slot*.  The stack is
+# allocated once per slot (zeros + first refill ≡ make_frame) and then
+# *reused across stream items*: a finished lane's slot is refilled in
+# place with the next item's (m, n) interior — an O(m·n) interior write
+# plus the O(m+n) ghost refresh, with no jnp.pad, no re-allocation and
+# no host round-trip of the frame.  Stale block-round-up cells from the
+# previous item are inert by the same dependency-cone argument that lets
+# :func:`refresh_frame` leave them untouched.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneFrameSpec:
+    """Static geometry of a lane-stacked frame: ``lanes`` independent
+    :class:`FrameSpec` frames carried as one (lanes, H, W) array."""
+
+    lanes: int
+    frame: FrameSpec
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return (self.lanes, *self.frame.shape)
+
+
+def alloc_lane_frames(lspec: LaneFrameSpec, dtype) -> jnp.ndarray:
+    """Allocate the lane slots — once, at stream start (the only
+    full-frame allocation of the streaming path)."""
+    return jnp.zeros(lspec.shape, dtype)
+
+
+def make_lane_frames(a: jnp.ndarray, spec: FrameSpec,
+                     boundary: Boundary | str) -> jnp.ndarray:
+    """Embed a (lanes, m, n) stack into lane frames (one-shot staging)."""
+    return jax.vmap(lambda x: make_frame(x, spec, boundary))(a)
+
+
+def refill_lane_frames(frames: jnp.ndarray, interiors: jnp.ndarray,
+                       spec: FrameSpec,
+                       boundary: Boundary | str) -> jnp.ndarray:
+    """Refill lane slots in place with the next stream items' interiors.
+
+    ``interiors`` is (lanes, m, n); the write lands at the domain offset
+    of every slot via ONE dynamic_update_slice — O(lanes·m·n), strictly
+    interior-sized — and the per-lane ghost rings are then re-asserted
+    from the new interiors (O(lanes·(m+n))).  No pad primitive, no fresh
+    frame allocation: under jit donation the slots update in place.
+    """
+    frames = jax.lax.dynamic_update_slice(
+        frames, interiors.astype(frames.dtype), (0, spec.pad, spec.pad))
+    return jax.vmap(lambda f: refresh_frame(f, spec, boundary))(frames)
+
+
+def unframe_lanes(frames: jnp.ndarray, spec: FrameSpec) -> jnp.ndarray:
+    """Slice every lane's (m, n) domain back out — once per round."""
+    p = spec.pad
+    return frames[:, p:p + spec.m, p:p + spec.n]
+
+
+def lane_env_frames(e: jnp.ndarray, spec: FrameSpec,
+                    boundary: Boundary | str,
+                    halo: bool = False) -> jnp.ndarray:
+    """Stage a (lanes, m, n) stack of per-lane env fields (one-shot)."""
+    return jax.vmap(lambda x: frame_env(x, spec, boundary, halo))(e)
+
+
+def alloc_lane_env(lspec: LaneFrameSpec, dtype, halo: bool = False):
+    """Zero-allocate the per-lane env slots (layout matches
+    :func:`frame_env`: block-rounded interior, or full frame with
+    ``halo``)."""
+    shape = lspec.frame.shape if halo else lspec.frame.interior
+    return jnp.zeros((lspec.lanes, *shape), dtype)
+
+
+def refill_lane_env(env_frames: jnp.ndarray, e: jnp.ndarray,
+                    spec: FrameSpec, boundary: Boundary | str,
+                    halo: bool = False) -> jnp.ndarray:
+    """Refill the env slots for the next items — interior write only (the
+    round-up/ghost cells are inert or re-asserted, as in
+    :func:`frame_env`)."""
+    if not halo:
+        return jax.lax.dynamic_update_slice(
+            env_frames, e.astype(env_frames.dtype), (0, 0, 0))
+    b = Boundary(boundary)
+    ghost = b if b is Boundary.WRAP else Boundary.ZERO
+    env_frames = jax.lax.dynamic_update_slice(
+        env_frames, e.astype(env_frames.dtype), (0, spec.pad, spec.pad))
+    return jax.vmap(lambda f: refresh_frame(f, spec, ghost))(env_frames)
+
+
+# ---------------------------------------------------------------------------
 # Sharded frames — the 1:n deployment of the persistent-halo engine.
 #
 # Each shard carries its own frame; the ghost ring is re-asserted by a
@@ -365,6 +458,37 @@ def frame_env_sharded(e_local: jnp.ndarray, sspec: ShardedFrameSpec,
                                          (spec.pad, spec.pad))
     return refresh_frame_sharded(
         frame, sspec, b if b is Boundary.WRAP else Boundary.ZERO)
+
+
+def refill_lane_frames_sharded(frames: jnp.ndarray, interiors: jnp.ndarray,
+                               sspec: ShardedFrameSpec,
+                               boundary: Boundary | str) -> jnp.ndarray:
+    """Per-shard lane-slot refill (runs inside ``shard_map``): each lane's
+    LOCAL interior is written in place and the ghost rings re-assert via
+    the lane-batched ppermute exchange — the sharded twin of
+    :func:`refill_lane_frames`."""
+    p = sspec.local.pad
+    frames = jax.lax.dynamic_update_slice(
+        frames, interiors.astype(frames.dtype), (0, p, p))
+    return jax.vmap(
+        lambda f: refresh_frame_sharded(f, sspec, boundary))(frames)
+
+
+def refill_lane_env_sharded(env_frames: jnp.ndarray, e: jnp.ndarray,
+                            sspec: ShardedFrameSpec,
+                            boundary: Boundary | str,
+                            halo: bool = False) -> jnp.ndarray:
+    """Sharded twin of :func:`refill_lane_env` (inside ``shard_map``)."""
+    if not halo:
+        return jax.lax.dynamic_update_slice(
+            env_frames, e.astype(env_frames.dtype), (0, 0, 0))
+    b = Boundary(boundary)
+    ghost = b if b is Boundary.WRAP else Boundary.ZERO
+    p = sspec.local.pad
+    env_frames = jax.lax.dynamic_update_slice(
+        env_frames, e.astype(env_frames.dtype), (0, p, p))
+    return jax.vmap(
+        lambda f: refresh_frame_sharded(f, sspec, ghost))(env_frames)
 
 
 def shard_domain_bounds(sspec: ShardedFrameSpec) -> jnp.ndarray:

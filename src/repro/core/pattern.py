@@ -25,7 +25,11 @@ blocking).  Read-only per-cell fields (the paper's ``env``) enter through
 
 Loop bodies are *done-masked* so the pattern is ``vmap``-safe: under
 ``farm`` (streaming 1:1 mode) each stream item runs to its own trip count
-while vmap executes until all are done.
+while vmap executes until all are done.  :meth:`LoopOfStencilReduce.
+farm_run` makes that mode first-class — ONE while_loop over a stacked
+(lanes, frame) carry with per-lane done masks — and
+:class:`repro.core.streaming.FarmEngine` streams through it with lane
+slots that persist (and are refilled in place) across stream items.
 
 ``step`` mode generalises the stencil to an arbitrary pytree transformer —
 the k=0 map-reduce case the paper notes is subsumed — which is how the
@@ -89,6 +93,11 @@ class LoopOfStencilReduce:
               may overshoot convergence by < unroll iterations).  Under
               ``backend="pallas-multistep"`` this is also the temporal-
               blocking depth T (sweeps fused per HBM round-trip).
+              ``unroll="auto"`` picks T from the cost heuristic
+              (:func:`repro.core.executor.auto_unroll`: mesh-aware
+              k·T < min(local m, n) ceiling + redundant-compute limit) at
+              ``run`` time, once the grid shape is known; an explicit
+              infeasible T raises with the feasible ceiling spelled out.
     backend:  loop-body realisation — "jnp" (shift algebra), "pallas"
               (fused kernel on a persistent halo frame),
               "pallas-multistep" (temporal blocking), or "pallas-sharded"
@@ -136,6 +145,11 @@ class LoopOfStencilReduce:
             raise ValueError(
                 "backend='pallas-sharded' needs a partition= "
                 "(repro.sharding.specs.GridPartition)")
+        if self.unroll != "auto" and (not isinstance(self.unroll, int)
+                                      or self.unroll < 1):
+            raise ValueError(
+                f"unroll must be a positive int or 'auto'; "
+                f"got {self.unroll!r}")
 
     # -- single stencil application ------------------------------------
     def _apply(self, a, env=()):
@@ -178,6 +192,9 @@ class LoopOfStencilReduce:
         """
         if self.state_init is not None and state0 is None:
             state0 = self.state_init()
+        resolved = self._resolve_unroll(getattr(a0, "shape", None))
+        if resolved is not self:
+            return resolved.run(a0, state0, env=env)
         if self.backend != "jnp":
             if self.mode != "taps" or getattr(a0, "ndim", None) != 2:
                 raise ValueError(
@@ -199,6 +216,33 @@ class LoopOfStencilReduce:
         return self._drive(a0, state0, step=one_iter,
                            state_view=lambda a: a,
                            finalize=lambda a: a)
+
+    # -- unroll resolution (the T auto-tuner seam) -----------------------
+    def _resolve_unroll(self, shape) -> "LoopOfStencilReduce":
+        """Resolve ``unroll="auto"`` against the grid shape (and mesh for
+        the sharded backend), and fail loudly on an infeasible explicit T.
+        Returns ``self`` when nothing changes, else a resolved copy."""
+        from .executor import auto_unroll, check_unroll_feasible
+
+        if shape is None or len(shape) < 2:
+            if self.unroll == "auto":
+                return dataclasses.replace(self, unroll=1)
+            return self
+        m, n = shape[-2], shape[-1]
+        part = (self.partition if self.backend == "pallas-sharded"
+                else None)
+        if self.unroll == "auto":
+            deep = self.backend in ("pallas-multistep", "pallas-sharded")
+            T = auto_unroll(m, n, k=self.k, block=self.block,
+                            part=part) if deep else 1
+            return dataclasses.replace(self, unroll=T)
+        if self.backend in ("pallas", "pallas-multistep",
+                            "pallas-sharded"):
+            sweeps = (self.unroll
+                      if self.backend != "pallas" else 1)
+            check_unroll_feasible(m, n, max(sweeps, 1), k=self.k,
+                                  part=part)
+        return self
 
     # -- the persistent-halo loop (pallas backends) ----------------------
     def _run_persistent(self, a0, state0, env) -> LoopResult:
@@ -269,6 +313,114 @@ class LoopOfStencilReduce:
                        out_specs=(pspec, P(), P()))
         a, r, it = fn(a0, *env)
         return LoopResult(a=a, reduced=r, iters=it, state=None)
+
+    # -- the lane-stacked loop (1:1 streaming farm) ----------------------
+    def farm_run(self, a0, *, env=(), done0=None) -> LoopResult:
+        """Run a FARM of convergence loops as ONE done-masked while_loop
+        over a stacked (lanes, ...) carry — the paper's 1:1 streaming
+        mode on the persistent engine.
+
+        ``a0`` carries a leading lane axis ((lanes, m, n) on the array
+        backends; any pytree of lane-stacked leaves in step mode), and so
+        does every ``env`` field (stream items bring their own env).  On
+        the Pallas backends the lane frames are built once and every
+        sweep is ONE vmapped kernel launch; each lane runs to its own
+        trip count (``done0`` pre-masks lanes — the streaming engine uses
+        it for ragged final rounds).  Results match ``vmap(self.run)``
+        lane for lane; ordering is positional (ofarm's contract).
+
+        The sharded 1:n×1:1 composition (lanes spread over a mesh axis)
+        lives in :class:`repro.core.streaming.FarmEngine`, which also
+        adds the cross-item slot reuse.
+        """
+        if self.state_init is not None:
+            raise ValueError(
+                "the -s variant is not supported on farm_run "
+                "(per-lane states do not compose with a shared loop "
+                "state)")
+        if self.backend == "pallas-sharded":
+            raise ValueError(
+                "backend='pallas-sharded' lanes are driven by "
+                "repro.core.streaming.FarmEngine (they need a mesh "
+                "carrying both the lane and the spatial axes)")
+        resolved = self._resolve_unroll(
+            getattr(a0, "shape", None) and a0.shape[1:])
+        if resolved is not self:
+            return resolved.farm_run(a0, env=env, done0=done0)
+
+        if self.backend != "jnp":
+            if self.mode != "taps" or getattr(a0, "ndim", None) != 3:
+                raise ValueError(
+                    "pallas farm_run requires mode='taps' and a "
+                    "(lanes, m, n) stack; got mode="
+                    f"{self.mode!r}, ndim={getattr(a0, 'ndim', None)}")
+            from .executor import StencilEngine
+
+            eng = StencilEngine(
+                f=self.f, k=self.k, boundary=self.boundary,
+                combine=self.combine, identity=self.identity,
+                delta=self.delta, measure=self.measure, block=self.block,
+                unroll=self.unroll, backend=self.backend,
+                interpret=self.interpret)
+            frames, env_frames, lspec = eng.prepare_lanes(a0, env)
+            return self._drive_lanes(
+                frames,
+                step=lambda fr: eng.sweeps_lanes(fr, env_frames, lspec),
+                finalize=lambda fr: eng.unframe_lanes(fr, lspec),
+                done0=done0)
+
+        def step(a):
+            def one(a1, *e):
+                a_prev = a1
+                for _ in range(self.unroll):
+                    a_prev, a1 = a1, self._apply(a1, e)
+                return a1, self._reduce(self._measure(a1, a_prev))
+            return jax.vmap(one)(a, *env)
+
+        return self._drive_lanes(a0, step=step, finalize=lambda a: a,
+                                 done0=done0)
+
+    def _drive_lanes(self, a0, *, step, finalize, done0=None
+                     ) -> LoopResult:
+        """Lane-stacked repeat/until: ``step(carry) -> (carry', r)`` with
+        ``r`` of shape (lanes,); each lane owns a done flag and an
+        iteration counter, and a lane whose flag (or iteration cap) has
+        fired keeps its carry frozen while the others run on — the
+        while_loop exits when no live lane remains.  Semantically
+        identical to ``vmap``-ing :meth:`_drive` lane by lane, but shaped
+        so a streaming executor can hold the stacked carry across items.
+        """
+        r_aval = jax.eval_shape(lambda a: step(a)[1], a0)
+        lanes = r_aval.shape[0]
+        r0 = jnp.full((lanes,), self._id, dtype=r_aval.dtype)
+        it0 = jnp.zeros((lanes,), jnp.int32)
+        d0 = (jnp.zeros((lanes,), bool) if done0 is None
+              else jnp.asarray(done0, bool).reshape((lanes,)))
+
+        def lane_where(live, old, new):
+            return jax.tree.map(
+                lambda o, n: jnp.where(
+                    live.reshape((lanes,) + (1,) * (o.ndim - 1)), n, o),
+                old, new)
+
+        def body(carry):
+            a, r, it, done = carry
+            live = jnp.logical_and(~done, it < self.max_iters)
+            a_new, r_new = step(a)
+            done_new = jax.vmap(self._cond_value, in_axes=(0, None))(
+                r_new, None)
+            return (lane_where(live, a, a_new),
+                    jnp.where(live, r_new, r),
+                    jnp.where(live, it + self.unroll, it),
+                    jnp.where(live, jnp.logical_or(done, done_new), done))
+
+        def cond_fun(carry):
+            _, _, it, done = carry
+            return jnp.any(jnp.logical_and(~done, it < self.max_iters))
+
+        a, r, it, _ = jax.lax.while_loop(cond_fun, body,
+                                         (a0, r0, it0, d0))
+        return LoopResult(a=finalize(a), reduced=r, iters=it, state=None)
 
     # -- shared while_loop scaffold (all backends) -----------------------
     def _drive(self, a0, state0, *, step, state_view, finalize

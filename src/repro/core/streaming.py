@@ -1,4 +1,4 @@
-"""Stream-parallel tier: pipe / farm / ofarm, and 1:1 vs 1:n deployments.
+"""Stream-parallel tier: pipe / farm / ofarm on the persistent engine.
 
 The paper's two-tier model [1]: data-parallel patterns (stencil, reduce,
 Loop-of-stencil-reduce) nest inside stream-parallel ones (pipe, farm).  The
@@ -7,28 +7,40 @@ experiments use exactly two compositions:
     pipe(read, sobel, write)                       (§4.2)
     pipe(read, detect, ofarm(restore), write)      (§4.3)
 
-JAX realisation:
+JAX realisation, two tiers of its own:
 
-* ``pipe``  — function composition per item, with *async dispatch* giving
-  pipeline overlap between host-side stages (read/write) and device compute
-  (the OpenCL-events analogue).
-* ``farm``  — independent items processed concurrently.  On-device this is
-  ``vmap`` (1:1 mode: many items, one device program each lane) or batch
-  sharding over the ``data`` mesh axis (many items across devices).
-* ``ofarm`` — order-preserving farm; JAX's batched execution is
-  deterministic and order-preserving by construction, so ofarm == farm with
-  the ordering guarantee documented.
+* the *generic* tier — :func:`pipe`, :func:`farm`, :func:`ofarm`,
+  :func:`sharded_farm`, :class:`StreamRunner` — maps arbitrary workers
+  over stream items (vmap / batch sharding / async double-buffered
+  dispatch).  Kept for map-style stages (Sobel) and as the reference
+  path; every batch re-enters the worker from the host.
 
-Because :class:`repro.core.pattern.LoopOfStencilReduce` is done-masked, a
-farm of convergence loops is safe: each lane runs to its own trip count.
+* the *engine* tier — :class:`FarmEngine` — the FastFlow-style
+  persistent-device deployment for farms whose worker is a
+  Loop-of-stencil-reduce.  L lane *slots* hold persistent halo frames
+  (:mod:`repro.core.frames`), the whole farm advances as ONE done-masked
+  ``while_loop`` over the stacked (lanes, frame) carry
+  (:meth:`repro.core.pattern.LoopOfStencilReduce.farm_run` semantics),
+  and a finished round's slots are *refilled in place* with the next
+  items' interiors — no re-pad, no re-allocation, no host round-trip of
+  the frame; only new input and extracted output cross the host
+  boundary, exactly the paper's device-buffer-persistence-across-stream-
+  items design point.  Host-side double buffering (the read stage
+  prepares round i+1 and the write stage drains round i-1 while the
+  device runs round i) rides on JAX async dispatch.
+
+``ofarm`` ordering comes for free everywhere: lanes are positional and
+batched execution is deterministic.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Iterable, Iterator, Sequence
+from itertools import islice
+from typing import Any, Callable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -42,10 +54,15 @@ def pipe(*stages: Callable) -> Callable:
 
 
 def farm(worker: Callable, *, lanes_axis: int = 0) -> Callable:
-    """1:1 mode — apply ``worker`` to every item of a stacked stream batch.
+    """1:1 mode, generic tier — apply ``worker`` to every item of a
+    stacked stream batch via vmap.
 
-    ``worker`` may itself be a Loop-of-stencil-reduce ``run``; done-masking
-    makes the vmapped while_loop per-lane correct.
+    ``worker`` may itself be a Loop-of-stencil-reduce ``run``; done-
+    masking makes the vmapped while_loop per-lane correct.  For a farm of
+    loops on the persistent engine (one kernel launch per sweep for the
+    whole farm, lane slots reusable across stream items) use
+    :meth:`~repro.core.pattern.LoopOfStencilReduce.farm_run` /
+    :class:`FarmEngine` instead.
     """
     return jax.vmap(worker, in_axes=lanes_axis, out_axes=lanes_axis)
 
@@ -57,12 +74,15 @@ def ofarm(worker: Callable, *, lanes_axis: int = 0) -> Callable:
 
 
 def sharded_farm(worker: Callable, mesh: Mesh, axis: str = "data") -> Callable:
-    """Farm whose lanes are spread over a mesh axis (items across devices).
+    """Generic-tier farm whose lanes are spread over a mesh axis.
 
     The jit wrapper is built ONCE here — constructing ``jax.jit(vw)``
     inside ``run`` would mint a fresh wrapper (and compilation cache) per
     call, retracing the worker on every batch (regression-tested by
-    trace counting in tests/core/test_streaming.py).
+    trace counting in tests/core/test_streaming.py).  Every batch still
+    ``device_put``s its items and re-enters the worker from the host —
+    :class:`FarmEngine` (with ``mesh=``) is the engine-tier replacement
+    that keeps per-lane halo frames device-resident across batches.
     """
     jvw = jax.jit(jax.vmap(worker))
     sharding = NamedSharding(mesh, P(axis))
@@ -82,6 +102,11 @@ class StreamRunner:
     device processes batch i, the host 'read' stage prepares batch i+1 and
     the 'write' stage consumes batch i-1 (JAX async dispatch provides the
     overlap; ``block_until_ready`` only at the sink).
+
+    Generic tier: the worker re-enters from the host per batch.  Farms of
+    convergence loops should ride :class:`FarmEngine`, which shares this
+    host protocol but keeps the loop state (the halo frames) on device
+    between batches.
     """
 
     worker: Callable                  # jitted device stage
@@ -109,22 +134,334 @@ class StreamRunner:
                     else jax.tree.map(lambda x: jnp.asarray(x)[None], chunk[0])
                 nxt = self.worker(stacked)   # async dispatch
             if inflight is not None:
-                for item in _unstack(inflight):
+                for item in self._unstack(inflight):
                     self.sink(item)
                     n += 1
             inflight = nxt
             if not chunk:
                 break
         if inflight is not None:
-            for item in _unstack(inflight):
+            for item in self._unstack(inflight):
                 self.sink(item)
                 n += 1
         return n
 
+    @staticmethod
+    def _unstack(batched) -> Iterator:
+        """Yield per-item views of a stacked result LAZILY — the sink runs
+        on item i before item i+1 is sliced, so a sink that consumes (or
+        discards) items incrementally never holds the whole batch of
+        slices at once."""
+        leaves = jax.tree.leaves(batched)
+        if not leaves:
+            return
+        for i in range(leaves[0].shape[0]):
+            yield jax.tree.map(lambda x: x[i], batched)
 
-def _unstack(batched):
-    leaves = jax.tree.leaves(batched)
-    if not leaves:
-        return []
-    b = leaves[0].shape[0]
-    return [jax.tree.map(lambda x: x[i], batched) for i in range(b)]
+
+# ---------------------------------------------------------------------------
+# FarmEngine — the lane-resident streaming engine (engine tier).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FarmEngine:
+    """Lane-resident streaming farm: persistent-frame lane slots with
+    device-side slot refill and host-side double buffering.
+
+    ``loop`` is the per-item worker (a :class:`~repro.core.pattern.
+    LoopOfStencilReduce`); ``lanes`` is the number of device-resident
+    slots.  The stream advances in *rounds*: L items are staged into the
+    slots (an O(interior) in-place refill — the frames were allocated
+    once, at stream start), the whole farm runs as ONE done-masked
+    while_loop to each lane's own trip count, and the (m, n) results are
+    sliced out.  Between rounds nothing but new input and extracted
+    output crosses the host boundary; the frames never do.
+
+    ``prep`` optionally maps a raw stream item to ``(a0, env_tuple)`` on
+    device (vmapped over lanes) — the farm's per-item read stage (e.g.
+    the §4.3 detection pass feeding restoration).
+
+    Deployments:
+
+    * ``mesh=None`` — single device, lanes on the vmapped kernel grid.
+    * ``mesh=`` with a single-device backend ("jnp"/"pallas"/
+      "pallas-multistep") — lanes spread over ``mesh[lane_axis]`` via
+      ``shard_map`` (the 1:1 mode across devices: each shard owns
+      lanes/P slots and its own while trip count — no collectives cross
+      the lane axis).
+    * ``loop.backend == "pallas-sharded"`` — the two-tier composition:
+      lanes over ``lane_axis`` × each lane's frame spatially decomposed
+      over ``loop.partition``'s axes (all on the same ``mesh``), with the
+      lane-batched ppermute ghost exchange inside the shared while body.
+      ``prep`` is not supported here (it would run on spatially-local
+      blocks).
+
+    Use :meth:`run` for the full source→sink stream protocol, or
+    :meth:`round` to push one stacked batch through the slots.
+    """
+
+    loop: Any                          # LoopOfStencilReduce worker
+    lanes: int = 4
+    prep: Optional[Callable] = None    # item -> (a0, env tuple), on device
+    mesh: Optional[Mesh] = None
+    lane_axis: str = "data"
+
+    def __post_init__(self):
+        loop = self.loop
+        if loop.state_init is not None:
+            raise ValueError("FarmEngine does not support the -s variant "
+                             "(per-lane loop states are ambiguous)")
+        if loop.mode != "taps" and loop.backend != "jnp":
+            raise ValueError("FarmEngine needs mode='taps' on the pallas "
+                             f"backends; got mode={loop.mode!r}")
+        if self.mesh is not None:
+            if self.lane_axis not in self.mesh.axis_names:
+                raise ValueError(
+                    f"lane_axis {self.lane_axis!r} not in mesh axes "
+                    f"{self.mesh.axis_names}")
+            if self.lanes % self.mesh.shape[self.lane_axis]:
+                raise ValueError(
+                    f"lanes={self.lanes} must divide evenly over mesh "
+                    f"axis {self.lane_axis!r} "
+                    f"(size {self.mesh.shape[self.lane_axis]})")
+        if loop.backend == "pallas-sharded":
+            if self.mesh is None:
+                raise ValueError(
+                    "backend='pallas-sharded' lanes need mesh= (carrying "
+                    "the lane axis AND the partition's spatial axes)")
+            part = loop.partition
+            for name in part.axis_names:
+                if name == self.lane_axis:
+                    raise ValueError(
+                        f"partition axis {name!r} collides with "
+                        f"lane_axis; use distinct mesh axes for lanes "
+                        "and the spatial decomposition")
+                if name not in self.mesh.axis_names:
+                    raise ValueError(
+                        f"partition axis {name!r} missing from mesh "
+                        f"axes {self.mesh.axis_names}")
+            if self.prep is not None:
+                raise ValueError(
+                    "prep= is not supported with pallas-sharded lanes "
+                    "(it would run on spatially-local blocks)")
+        prep = self.prep or (lambda item: (item, ()))
+        self._vprep = jax.vmap(prep)
+        self._bound = False
+        self._frames = None
+        self._env_frames = ()
+        # one jit wrapper for the stream's lifetime: every round hits the
+        # same compilation (trace-count regression-tested); the slot
+        # buffers are donated so the refill updates them in place
+        self._round_fn = jax.jit(self._round_impl, donate_argnums=(0, 1))
+        self.stats = {"items": 0, "rounds": 0, "h2d_bytes": 0,
+                      "d2h_bytes": 0}
+
+    # -- static geometry (first item binds the shapes) -------------------
+    def _bind(self, item: np.ndarray):
+        L = self.lanes
+        item = np.asarray(item)
+        items_aval = jax.ShapeDtypeStruct((L, *item.shape), item.dtype)
+        a_aval, env_avals = jax.eval_shape(self._vprep, items_aval)
+        if len(a_aval.shape) != 3:
+            raise ValueError(
+                f"stream items must be 2-D grids; prep produced "
+                f"{a_aval.shape}")
+        m, n = a_aval.shape[1:]
+        self._loop = self.loop._resolve_unroll((m, n))
+        loop = self._loop
+        self._item_aval = items_aval
+        self._nshards = (1 if self.mesh is None
+                         else self.mesh.shape[self.lane_axis])
+
+        if loop.backend == "jnp":
+            self._eng, self._lspec = None, None
+            self._frames = jnp.zeros((), a_aval.dtype)
+            self._env_frames = ()
+        elif loop.backend == "pallas-sharded":
+            from .executor import ShardedStencilEngine, local_extents
+
+            part = loop.partition
+            for name, ax in zip(part.axis_names, part.array_axes):
+                nsh = part.mesh.shape[name]
+                if (m, n)[ax] % nsh:
+                    raise ValueError(
+                        f"array axis {ax} (size {(m, n)[ax]}) must "
+                        f"divide evenly over mesh axis {name!r} "
+                        f"(size {nsh})")
+            lm, ln = local_extents(m, n, part)
+            self._eng = ShardedStencilEngine(
+                f=loop.f, part=part, k=loop.k, boundary=loop.boundary,
+                combine=loop.combine, identity=loop.identity,
+                delta=loop.delta, measure=loop.measure, block=loop.block,
+                unroll=loop.unroll, interpret=loop.interpret)
+            self._lspec = self._eng.lane_sspec(lm, ln)
+            spatial = [None, None]
+            for name, ax in zip(part.axis_names, part.array_axes):
+                spatial[ax] = name
+            self._spatial = tuple(spatial)
+            fshape = self._lspec.local.shape
+            gshape = (L,
+                      fshape[0] * (part.mesh.shape[spatial[0]]
+                                   if spatial[0] else 1),
+                      fshape[1] * (part.mesh.shape[spatial[1]]
+                                   if spatial[1] else 1))
+            self._frames = jax.device_put(
+                np.zeros(gshape, a_aval.dtype),
+                NamedSharding(self.mesh, self._fspec()))
+            self._env_frames = ()
+        else:
+            from .executor import StencilEngine
+            from .frames import alloc_lane_env
+
+            self._eng = StencilEngine(
+                f=loop.f, k=loop.k, boundary=loop.boundary,
+                combine=loop.combine, identity=loop.identity,
+                delta=loop.delta, measure=loop.measure, block=loop.block,
+                unroll=loop.unroll, backend=loop.backend,
+                interpret=loop.interpret)
+            self._lspec = self._eng.lane_spec(L // self._nshards, m, n)
+            frames = np.zeros((L, *self._lspec.frame.shape), a_aval.dtype)
+            envs = tuple(
+                np.zeros((L,) + tuple(
+                    alloc_lane_env(self._lspec, e.dtype,
+                                   self._eng._halo_env).shape[1:]),
+                    e.dtype)
+                for e in env_avals)
+            if self.mesh is None:
+                self._frames = jnp.asarray(frames)
+                self._env_frames = tuple(jnp.asarray(e) for e in envs)
+            else:
+                lane_sh = NamedSharding(self.mesh, P(self.lane_axis))
+                self._frames = jax.device_put(frames, lane_sh)
+                self._env_frames = tuple(
+                    jax.device_put(e, lane_sh) for e in envs)
+        self._bound = True
+
+    def _fspec(self) -> P:
+        """PartitionSpec of the lane-stacked frames/interiors (composed
+        sharded mode: lanes × spatial)."""
+        return P(self.lane_axis, *self._spatial)
+
+    # -- one round: refill slots, run the farm, slice results ------------
+    def _round_impl(self, frames, env_frames, items, active):
+        a0s, envs = self._vprep(items)
+        if self.mesh is None:
+            return self._local_round(frames, env_frames, a0s, envs,
+                                     active)
+        from repro.sharding.specs import shard_map
+
+        loop = self._loop
+        if loop.backend == "pallas-sharded":
+            data_spec = self._fspec()
+        else:
+            data_spec = P(self.lane_axis)
+        fr_spec = P() if loop.backend == "jnp" else data_spec
+        env_specs = tuple(data_spec for _ in env_frames)
+        fn = shard_map(
+            self._local_round, mesh=self.mesh,
+            in_specs=(fr_spec, env_specs, data_spec,
+                      tuple(data_spec for _ in envs), P(self.lane_axis)),
+            out_specs=(fr_spec, env_specs, data_spec, P(self.lane_axis),
+                       P(self.lane_axis)))
+        return fn(frames, env_frames, a0s, envs, active)
+
+    def _local_round(self, frames, env_frames, interiors, envs, active):
+        """The device-side round (directly, or per-shard inside
+        shard_map): in-place slot refill → ONE done-masked lane
+        while_loop → O(interior) result slices.  Returns
+        (frames', env_frames', outs, reduced, iters)."""
+        loop = self._loop
+        done0 = jnp.logical_not(active)
+        if loop.backend == "jnp":
+            res = loop.farm_run(interiors, env=envs, done0=done0)
+            return frames, env_frames, res.a, res.reduced, res.iters
+        eng, lspec = self._eng, self._lspec
+        frames, env_frames = eng.refill_lanes(frames, env_frames,
+                                              interiors, envs, lspec)
+        res = loop._drive_lanes(
+            frames,
+            step=lambda fr: eng.sweeps_lanes(fr, env_frames, lspec),
+            finalize=lambda fr: fr, done0=done0)
+        outs = eng.unframe_lanes(res.a, lspec)
+        return res.a, env_frames, outs, res.reduced, res.iters
+
+    def round(self, items, count: Optional[int] = None):
+        """Push one stacked (≤ lanes, ...) batch through the slots.
+
+        Returns per-item ``(a, reduced, iters)`` stacks of length
+        ``count`` (short batches are padded to the lane count on the
+        host and masked out on device — the shapes, and therefore the
+        compilation, never change).
+        """
+        items = np.asarray(items)
+        count = items.shape[0] if count is None else count
+        if count > self.lanes:
+            raise ValueError(f"batch of {count} items exceeds "
+                             f"lanes={self.lanes}")
+        if not self._bound:
+            self._bind(items[0])
+        elif (items.shape[1:] != self._item_aval.shape[1:]
+              or items.dtype != self._item_aval.dtype):
+            raise ValueError(
+                f"stream item shape changed mid-stream: slots are bound "
+                f"to {self._item_aval.shape[1:]}/{self._item_aval.dtype},"
+                f" got {items.shape[1:]}/{items.dtype} (build a fresh "
+                "FarmEngine per item geometry)")
+        # payload accounting, symmetric with _drain's d2h: the zero
+        # lanes padding a ragged round are implementation overhead, not
+        # per-item traffic
+        self.stats["h2d_bytes"] += (items.nbytes // items.shape[0]) * count
+        if items.shape[0] < self.lanes:
+            pad = np.zeros((self.lanes - items.shape[0],
+                            *items.shape[1:]), items.dtype)
+            items = np.concatenate([items, pad], axis=0)
+        if count == self.lanes:
+            if getattr(self, "_active_full", None) is None:
+                self._active_full = jnp.ones((self.lanes,), bool)
+            active = self._active_full
+        else:
+            active = jnp.asarray(np.arange(self.lanes) < count)
+        self.stats["rounds"] += 1
+        self.stats["items"] += count
+        self._frames, self._env_frames, outs, red, iters = self._round_fn(
+            self._frames, self._env_frames, jnp.asarray(items), active)
+        return outs[:count], red[:count], iters[:count]
+
+    # -- the stream protocol (read ∥ compute ∥ write) --------------------
+    def run(self, source, sink) -> int:
+        """Drive a whole stream: ``source`` yields items (callable
+        returning an iterator, or an iterable), ``sink`` consumes one
+        :class:`~repro.core.pattern.LoopResult` per item, in order.
+
+        Host-side double buffering: round i's dispatch is asynchronous,
+        so the host drains round i-1 into the sink (and reads round
+        i+1's items) while the device runs round i.
+        """
+        it = iter(source() if callable(source) else source)
+        n = 0
+        inflight = None
+        while True:
+            batch = list(islice(it, self.lanes))
+            nxt = self.round(np.stack(batch), len(batch)) if batch \
+                else None
+            if inflight is not None:
+                n += self._drain(inflight, sink)
+            inflight = nxt
+            if not batch:
+                break
+        if inflight is not None:
+            n += self._drain(inflight, sink)
+        return n
+
+    def _drain(self, result, sink) -> int:
+        from .pattern import LoopResult
+
+        # ONE device→host pull per round (this is the point where the
+        # host blocks on the in-flight round); per-item results are then
+        # zero-copy numpy views, handed to the sink one at a time
+        outs, red, iters = jax.device_get(result)
+        self.stats["d2h_bytes"] += outs.nbytes + red.nbytes + iters.nbytes
+        for i in range(outs.shape[0]):
+            sink(LoopResult(a=outs[i], reduced=red[i], iters=iters[i]))
+        return outs.shape[0]

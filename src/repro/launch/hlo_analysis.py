@@ -118,6 +118,21 @@ def split_computations(hlo: str) -> Dict[str, Computation]:
     return comps
 
 
+def operand_names(argstr: str) -> List[str]:
+    """Operand instruction names from an HLO call-site argument string.
+
+    Two textual conventions exist: newer XLA prints bare names
+    (``dot(lhs, rhs)``), older XLA (jax 0.4.x) prints inline types with
+    %-prefixed names (``dot(f32[32,128]{1,0} %lhs, ...)``) — a naive
+    comma split lands inside the shape brackets there.  With ``%``
+    markers present, the names ARE the markers; otherwise fall back to
+    the comma split.
+    """
+    if "%" in argstr:
+        return re.findall(r"%([\w.\-]+)", argstr)
+    return [tok.strip() for tok in argstr.split(",") if tok.strip()]
+
+
 def loop_trip_count(cond: Computation) -> int:
     """Counted loops compare the induction var against a constant; take the
     largest scalar integer constant in the condition computation."""
@@ -143,7 +158,8 @@ def _dot_flops(ins: Instr, comp: Computation) -> float:
     lm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
     if not ops or not lm:
         return 2.0 * out_elems      # degenerate
-    lhs_name = ops.group(1).split(",")[0].strip().lstrip("%")
+    names = operand_names(ops.group(1))
+    lhs_name = names[0] if names else ""
     lhs_type = comp.symbols.get(lhs_name, "")
     lhs_shapes = parse_shapes(lhs_type)
     if not lhs_shapes:
@@ -187,27 +203,16 @@ def _collective_wire_bytes(ins: Instr, comp: Computation,
 
 
 def _operand_bytes(ins: Instr, comp: Computation) -> int:
-    ops = re.search(r"\w+\((.*)\)", ins.line)
-    if not ops:
-        return 0
-    total = 0
-    for tok in ops.group(1).split(","):
-        nm = tok.strip().lstrip("%")
-        if nm in comp.symbols:
-            total += tensor_bytes(comp.symbols[nm])
-    return total
+    return sum(_operand_bytes_list(ins, comp))
 
 
 def _operand_bytes_list(ins: Instr, comp: Computation):
     ops = re.search(r"[\w\-]+\((.*)\)", ins.line)
     if not ops:
         return []
-    out = []
-    for tok in ops.group(1).split(","):
-        nm = tok.strip().lstrip("%")
-        if nm in comp.symbols:
-            out.append(tensor_bytes(comp.symbols[nm]))
-    return out
+    return [tensor_bytes(comp.symbols[nm])
+            for nm in operand_names(ops.group(1))
+            if nm in comp.symbols]
 
 
 def _mem_bytes(ins: Instr, comp: Computation, comps, fusion_roots) -> float:
@@ -252,15 +257,15 @@ def _fusion_mem_bytes(ins: Instr, sub: Computation) -> float:
         if fi.op == "dynamic-slice":
             ops = re.search(r"dynamic-slice\(([^)]*)\)", fi.line)
             if ops:
-                src = ops.group(1).split(",")[0].strip().lstrip("%")
+                names = operand_names(ops.group(1))
+                src = names[0] if names else ""
                 if src in sub.params:
                     sliced[src] = sliced.get(src, 0) + tensor_bytes(
                         fi.out_type)
         if fi.op == "dynamic-update-slice":
             ops = re.search(r"dynamic-update-slice\(([^)]*)\)", fi.line)
             if ops:
-                names = [t.strip().lstrip("%")
-                         for t in ops.group(1).split(",")]
+                names = operand_names(ops.group(1))
                 if names and names[0] in sub.params:
                     dus_target = names[0]
                 if len(names) > 1 and names[1] in sub.symbols:

@@ -10,11 +10,15 @@ Topology (TPU v5e-class):
 The "model" axis is mapped innermost so tensor-parallel collectives stay
 on the shortest ICI rings; the "pod" axis carries only the gradient
 all-reduce (data-parallel across pods, over the slow inter-pod links).
+
+Meshes are built through :func:`repro.sharding.specs.make_mesh`, the
+version-portable shim (jax 0.4.x has no ``axis_types=`` kwarg).
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.sharding.specs import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False,
@@ -26,11 +30,9 @@ def make_production_mesh(*, multi_pod: bool = False,
     assert dm[0] * dm[1] == 256, "a pod is 256 chips"
     shape = (2, *dm) if multi_pod else dm
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Small mesh over however many (fake) devices the test process has."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"))

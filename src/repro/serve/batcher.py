@@ -9,7 +9,11 @@ Loop-of-stencil-reduce-s decode).
 
 This is the paper's farm over stream items at serving scale: every
 batch is an independent stream item for the device; done-masked decode
-lets requests inside a batch finish at their own lengths.  Length
+lets requests inside a batch finish at their own lengths.  The drain
+loop uses the stream tier's host-side double buffering (the
+:class:`repro.core.streaming.FarmEngine` protocol): batch i+1 is
+dispatched asynchronously before batch i's tokens are pulled to the
+host, so tokenisation/detokenisation overlaps device decode.  Length
 bucketing with proper pad masking is the next step and is noted in
 DESIGN.md; exact grouping keeps the compile cache small when clients
 quantise prompt lengths themselves.
@@ -66,19 +70,39 @@ class Batcher:
         self._queue = rest
         return batch
 
+    def _dispatch(self, batch: List[Request]):
+        """Launch one batch's generate loop (async dispatch — returns
+        device futures, no host sync)."""
+        toks = np.stack([r.prompt for r in batch]).astype(np.int32)
+        gen, lengths, _ = generate(
+            self.cfg, self.params, jnp.asarray(toks), self.gcfg,
+            cache_dtype=self.cache_dtype)
+        return batch, gen, lengths
+
+    @staticmethod
+    def _drain(inflight, out: List[Result]):
+        batch, gen, lengths = inflight
+        gen = np.asarray(gen)                # blocks on this batch only
+        for i, r in enumerate(batch):
+            out.append(Result(rid=r.rid, tokens=gen[i, :int(lengths[i])]))
+
     def run_all(self) -> List[Result]:
-        """Drain the queue; returns results in completion order."""
+        """Drain the queue; returns results in completion order.
+
+        Double-buffered: while the device decodes batch i, the host
+        forms and dispatches batch i+1 and drains batch i-1's tokens —
+        the stream tier's read ∥ compute ∥ write overlap.
+        """
         out: List[Result] = []
+        inflight = None
         while True:
             batch = self._form_batch()
+            nxt = self._dispatch(batch) if batch else None
+            if inflight is not None:
+                self._drain(inflight, out)
+            inflight = nxt
             if not batch:
                 break
-            toks = np.stack([r.prompt for r in batch]).astype(np.int32)
-            gen, lengths, _ = generate(
-                self.cfg, self.params, jnp.asarray(toks), self.gcfg,
-                cache_dtype=self.cache_dtype)
-            gen = np.asarray(gen)
-            for i, r in enumerate(batch):
-                out.append(Result(rid=r.rid,
-                                  tokens=gen[i, :int(lengths[i])]))
+        if inflight is not None:
+            self._drain(inflight, out)
         return out

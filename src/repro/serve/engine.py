@@ -12,6 +12,13 @@ The whole generation lowers to ONE on-device while_loop: the KV cache is
 the paper's persistent device memory — it never leaves HBM, and the
 done-reduce feeding the condition runs on device (beyond the paper, which
 still bounced the reduce result to the host each iteration).
+
+In stream-tier terms (:mod:`repro.core.streaming`) a generate batch IS a
+lane farm: each sequence is a lane of the done-masked loop, running to
+its own EOS trip count while the KV cache plays the persistent lane
+frame.  The host side composes accordingly — :class:`repro.serve.
+batcher.Batcher` drives batches through the FarmEngine's double-buffered
+read ∥ decode ∥ write protocol.
 """
 from __future__ import annotations
 

@@ -25,6 +25,38 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig
 
 
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, explicit: bool = False) -> Mesh:
+    """Version-portable ``jax.make_mesh``.
+
+    Newer jax takes ``axis_types=(AxisType.Auto, ...)`` (and
+    ``AxisType.Explicit`` for sharding-in-types); 0.4.x has neither the
+    kwarg nor ``jax.sharding.AxisType``.  Auto is the 0.4.x behaviour, so
+    the kwarg is only forwarded where it exists — the launch layer and
+    the multi-device tests go through this shim (same contract as
+    :func:`shard_map` below).
+    """
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(axis_shapes, axis_names)
+    ty = AxisType.Explicit if explicit else AxisType.Auto
+    return jax.make_mesh(axis_shapes, axis_names,
+                         axis_types=(ty,) * len(axis_names))
+
+
+def make_abstract_mesh(axis_shapes: Sequence[int],
+                       axis_names: Sequence[str]):
+    """Version-portable ``jax.sharding.AbstractMesh`` (newer jax:
+    ``AbstractMesh(sizes, names)``; 0.4.x: one tuple of (name, size)
+    pairs)."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(axis_shapes, axis_names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
 def shard_map(f: Callable, mesh: Mesh, in_specs, out_specs):
     """Version-portable ``shard_map`` without replication checking.
 

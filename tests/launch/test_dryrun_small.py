@@ -20,13 +20,12 @@ def run_small_dryrun(arch: str, shape: str) -> dict:
         import sys, json
         sys.path.insert(0, %r)
         import jax
-        from jax.sharding import AxisType
         import repro.launch.mesh as M
+        from repro.sharding.specs import make_mesh
         # shrink the production mesh for the CI-sized check
-        M.make_production_mesh = lambda multi_pod=False, **kw: jax.make_mesh(
+        M.make_production_mesh = lambda multi_pod=False, **kw: make_mesh(
             (2, 2, 2) if multi_pod else (4, 2),
-            ("pod", "data", "model") if multi_pod else ("data", "model"),
-            axis_types=(AxisType.Auto,) * (3 if multi_pod else 2))
+            ("pod", "data", "model") if multi_pod else ("data", "model"))
         import dataclasses
         import repro.configs as CFG
         from repro.configs.base import _REGISTRY

@@ -8,14 +8,7 @@ from repro.configs import get_config
 from repro.sharding import specs as SH
 
 
-def make_abstract_mesh(sizes, names):
-    # newer jax: AbstractMesh(sizes, names); 0.4.x: one shape_tuple of
-    # (name, size) pairs
-    from jax.sharding import AbstractMesh
-    try:
-        return AbstractMesh(sizes, names)
-    except TypeError:
-        return AbstractMesh(tuple(zip(names, sizes)))
+from repro.sharding.specs import make_abstract_mesh
 
 
 @pytest.fixture(scope="module")
