@@ -3,6 +3,11 @@ Loop-of-stencil-reduce-s (KV cache persistent in device memory, on-device
 EOS reduce).  Loads a checkpoint from examples/train_lm.py when present.
 
     PYTHONPATH=src python examples/serve_lm.py --arch qwen3-1.7b --reduced
+
+``--continuous`` serves the same prompts through continuous batching
+instead (per-sequence KV-slot refill, mid-batch emission): requests with
+wildly different token budgets stream through ``--batch`` persistent
+slots and are printed in COMPLETION order.
 """
 import argparse
 import sys
@@ -26,6 +31,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching: per-sequence KV-slot "
+                         "refill, results in completion order")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="request count for --continuous (> --batch "
+                         "slots, so slots get reused mid-batch)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)     # reduced config: CPU-friendly
@@ -35,6 +46,33 @@ def main():
                                       (args.batch, args.prompt_len)))
     gcfg = GenerateConfig(max_new_tokens=args.max_new, eos_id=1,
                           temperature=args.temperature, seed=0)
+
+    if args.continuous:
+        from repro.serve.batcher import Batcher, Request
+
+        b = Batcher(cfg, params, gcfg, max_batch=args.batch,
+                    cache_dtype=jnp.float32)
+        budgets = [max(1, (i * 7) % args.max_new + 1)
+                   for i in range(args.requests)]
+        for i, bud in enumerate(budgets):
+            b.submit(Request(
+                rid=i, max_new_tokens=bud,
+                prompt=np.asarray(rng.integers(
+                    2, cfg.vocab_size, args.prompt_len), np.int32)))
+        t0 = time.perf_counter()
+        results = b.run_continuous()
+        dt = time.perf_counter() - t0
+        eng = b.engines[0]
+        total = sum(len(r.tokens) for r in results)
+        print(f"[serve_lm] {args.arch} (reduced, continuous): "
+              f"{len(results)} requests through {args.batch} KV slots "
+              f"in {dt:.2f}s ({total / dt:.1f} tok/s, "
+              f"{eng.stats['segments']} segments, "
+              f"{eng.stats['prefills']} slot prefills)")
+        for r in results:           # completion order
+            print(f"  rid{r.rid} budget={budgets[r.rid]} "
+                  f"len={len(r.tokens)}: {r.tokens[:8].tolist()}...")
+        return
 
     t0 = time.perf_counter()
     out, lengths, iters = generate(cfg, params, prompt, gcfg,

@@ -19,7 +19,7 @@ from .pattern import (LoopOfStencilReduce, LoopResult, loop_of_stencil_reduce,
 from .halo import (GridPartition, exchange_halo,
                    distributed_loop_of_stencil_reduce)
 from .streaming import (pipe, farm, ofarm, sharded_farm, StreamRunner,
-                        FarmEngine)
+                        FarmEngine, StreamResult)
 
 __all__ = [
     "Boundary", "TapAccessor", "stencil_taps", "stencil_windows",
@@ -28,5 +28,5 @@ __all__ = [
     "loop_of_stencil_reduce", "loop_of_stencil_reduce_d",
     "loop_of_stencil_reduce_s", "GridPartition", "exchange_halo",
     "distributed_loop_of_stencil_reduce", "pipe", "farm", "ofarm",
-    "sharded_farm", "StreamRunner", "FarmEngine",
+    "sharded_farm", "StreamRunner", "FarmEngine", "StreamResult",
 ]

@@ -224,6 +224,42 @@ def unframe_lanes(frames: jnp.ndarray, spec: FrameSpec) -> jnp.ndarray:
     return frames[:, p:p + spec.m, p:p + spec.n]
 
 
+def refill_slot_frame(frames: jnp.ndarray, interior: jnp.ndarray,
+                      idx, spec: FrameSpec,
+                      boundary: Boundary | str) -> jnp.ndarray:
+    """Refill ONE lane slot (dynamic index ``idx``) with the next item.
+
+    The continuous-refill twin of :func:`refill_lane_frames`: the (m, n)
+    interior lands at the slot's domain offset via one O(interior)
+    dynamic_update_slice, then every lane's ghost ring is re-asserted —
+    O(lanes·(m+n)), cheaper than slicing the one (H, W) frame out and
+    back, and a no-op for untouched lanes (their ghosts already agree
+    with their domains).  No pad, no full-frame copy, no re-framing; the
+    same compilation serves every refill of the stream.
+    """
+    frames = jax.lax.dynamic_update_slice(
+        frames, interior[None].astype(frames.dtype),
+        (idx, spec.pad, spec.pad))
+    return jax.vmap(lambda f: refresh_frame(f, spec, boundary))(frames)
+
+
+def refill_slot_env(env_frames: jnp.ndarray, e: jnp.ndarray, idx,
+                    spec: FrameSpec, boundary: Boundary | str,
+                    halo: bool = False) -> jnp.ndarray:
+    """Refill ONE lane's env slot (continuous twin of
+    :func:`refill_lane_env`) — interior write at the dynamic index; with
+    ``halo`` the ghost rings re-assert exactly as :func:`frame_env`."""
+    if not halo:
+        return jax.lax.dynamic_update_slice(
+            env_frames, e[None].astype(env_frames.dtype), (idx, 0, 0))
+    b = Boundary(boundary)
+    ghost = b if b is Boundary.WRAP else Boundary.ZERO
+    env_frames = jax.lax.dynamic_update_slice(
+        env_frames, e[None].astype(env_frames.dtype),
+        (idx, spec.pad, spec.pad))
+    return jax.vmap(lambda f: refresh_frame(f, spec, ghost))(env_frames)
+
+
 def lane_env_frames(e: jnp.ndarray, spec: FrameSpec,
                     boundary: Boundary | str,
                     halo: bool = False) -> jnp.ndarray:

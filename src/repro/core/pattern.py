@@ -51,6 +51,47 @@ from .semantics import Boundary
 from .stencil import stencil_taps, stencil_windows, stencil_indexed
 
 
+def segmented_while(body, carry, *, finished, segment):
+    """Bounded early-exit slice of a done-masked lane loop.
+
+    The continuous-refill primitive shared by the farm tier
+    (:meth:`LoopOfStencilReduce.lane_segment`) and the serve tier
+    (:class:`repro.serve.engine.ContinuousEngine`): run ``body`` (carry →
+    carry) until
+
+    * any lane **newly** satisfies ``finished(carry)`` (a (lanes,) bool —
+      the dispatcher must be told so it can refill that lane's slot), or
+    * no unfinished lane remains (nothing left to advance), or
+    * ``segment`` body steps have elapsed (the bounded-latency knob: the
+      dispatcher regains control at least this often even when nothing
+      converges, e.g. to admit work that arrived after the segment was
+      dispatched).
+
+    Lanes already finished at entry do NOT trigger the early exit — only
+    a 0→1 transition of the finished mask does, so a segment entered with
+    retired lanes (queue drained) keeps advancing the live ones.
+    Returns ``(carry', steps)``; the carry shapes round-trip unchanged,
+    so ONE compilation serves every segment.
+    """
+    fin0 = finished(carry)
+
+    def seg_body(c):
+        inner, steps = c
+        return body(inner), steps + 1
+
+    def seg_cond(c):
+        inner, steps = c
+        fin = finished(inner)
+        newly = jnp.any(jnp.logical_and(fin, jnp.logical_not(fin0)))
+        return jnp.logical_and(
+            jnp.any(jnp.logical_not(fin)),
+            jnp.logical_and(steps < segment, jnp.logical_not(newly)))
+
+    carry, steps = jax.lax.while_loop(
+        seg_cond, seg_body, (carry, jnp.asarray(0, jnp.int32)))
+    return carry, steps
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class LoopResult:
@@ -369,33 +410,25 @@ class LoopOfStencilReduce:
                 finalize=lambda fr: eng.unframe_lanes(fr, lspec),
                 done0=done0)
 
-        def step(a):
-            def one(a1, *e):
-                a_prev = a1
-                for _ in range(self.unroll):
-                    a_prev, a1 = a1, self._apply(a1, e)
-                return a1, self._reduce(self._measure(a1, a_prev))
-            return jax.vmap(one)(a, *env)
+        return self._drive_lanes(a0, step=self._lane_step_jnp(env),
+                                 finalize=lambda a: a, done0=done0)
 
-        return self._drive_lanes(a0, step=step, finalize=lambda a: a,
-                                 done0=done0)
+    def _lane_step_jnp(self, env):
+        """Vmapped ``unroll``-deep step over a lane-stacked carry on the
+        jnp backend (``env`` fields lane-stacked alongside) — the step
+        both :meth:`farm_run` and the continuous streaming engine drive."""
+        def one(a1, *e):
+            a_prev = a1
+            for _ in range(self.unroll):
+                a_prev, a1 = a1, self._apply(a1, e)
+            return a1, self._reduce(self._measure(a1, a_prev))
+        return lambda a: jax.vmap(one)(a, *env)
 
-    def _drive_lanes(self, a0, *, step, finalize, done0=None
-                     ) -> LoopResult:
-        """Lane-stacked repeat/until: ``step(carry) -> (carry', r)`` with
-        ``r`` of shape (lanes,); each lane owns a done flag and an
-        iteration counter, and a lane whose flag (or iteration cap) has
-        fired keeps its carry frozen while the others run on — the
-        while_loop exits when no live lane remains.  Semantically
-        identical to ``vmap``-ing :meth:`_drive` lane by lane, but shaped
-        so a streaming executor can hold the stacked carry across items.
-        """
-        r_aval = jax.eval_shape(lambda a: step(a)[1], a0)
-        lanes = r_aval.shape[0]
-        r0 = jnp.full((lanes,), self._id, dtype=r_aval.dtype)
-        it0 = jnp.zeros((lanes,), jnp.int32)
-        d0 = (jnp.zeros((lanes,), bool) if done0 is None
-              else jnp.asarray(done0, bool).reshape((lanes,)))
+    def _lane_body(self, step, lanes: int):
+        """The shared done-masked lane body: one ``step`` over the stacked
+        carry with per-lane freeze.  ``carry = (a, r, it, done)``; a lane
+        whose flag (or iteration cap) has fired keeps its slice frozen
+        while the others run on."""
 
         def lane_where(live, old, new):
             return jax.tree.map(
@@ -414,6 +447,33 @@ class LoopOfStencilReduce:
                     jnp.where(live, it + self.unroll, it),
                     jnp.where(live, jnp.logical_or(done, done_new), done))
 
+        return body
+
+    def _lane_finished(self, carry):
+        """Per-lane 'this lane needs the dispatcher' mask: condition fired
+        OR iteration cap hit (a capped lane will never fire its flag, so
+        the continuous dispatcher must retire it like a converged one)."""
+        _, _, it, done = carry
+        return jnp.logical_or(done, it >= self.max_iters)
+
+    def _drive_lanes(self, a0, *, step, finalize, done0=None
+                     ) -> LoopResult:
+        """Lane-stacked repeat/until: ``step(carry) -> (carry', r)`` with
+        ``r`` of shape (lanes,); each lane owns a done flag and an
+        iteration counter, and a lane whose flag (or iteration cap) has
+        fired keeps its carry frozen while the others run on — the
+        while_loop exits when no live lane remains.  Semantically
+        identical to ``vmap``-ing :meth:`_drive` lane by lane, but shaped
+        so a streaming executor can hold the stacked carry across items.
+        """
+        r_aval = jax.eval_shape(lambda a: step(a)[1], a0)
+        lanes = r_aval.shape[0]
+        r0 = jnp.full((lanes,), self._id, dtype=r_aval.dtype)
+        it0 = jnp.zeros((lanes,), jnp.int32)
+        d0 = (jnp.zeros((lanes,), bool) if done0 is None
+              else jnp.asarray(done0, bool).reshape((lanes,)))
+        body = self._lane_body(step, lanes)
+
         def cond_fun(carry):
             _, _, it, done = carry
             return jnp.any(jnp.logical_and(~done, it < self.max_iters))
@@ -421,6 +481,25 @@ class LoopOfStencilReduce:
         a, r, it, _ = jax.lax.while_loop(cond_fun, body,
                                          (a0, r0, it0, d0))
         return LoopResult(a=finalize(a), reduced=r, iters=it, state=None)
+
+    def lane_segment(self, carry, *, step, segment: int):
+        """One bounded slice of the lane loop — the continuous-refill tier.
+
+        Runs the same done-masked body as :meth:`_drive_lanes` but hands
+        control back to the dispatcher as soon as any lane *newly*
+        finishes (condition fired or iteration cap hit), after at most
+        ``segment`` body steps, or immediately when no live lane remains.
+        ``carry = (a, r, it, done)`` round-trips unchanged in shape, so a
+        streaming executor resumes the SAME carry after refilling only
+        the finished lanes' slots in place — one compilation serves every
+        segment of the stream.  Returns ``(carry', steps)`` with
+        ``steps`` the number of body steps executed (each ``unroll``
+        sweeps deep).
+        """
+        lanes = carry[3].shape[0]
+        return segmented_while(
+            self._lane_body(step, lanes), carry,
+            finished=self._lane_finished, segment=segment)
 
     # -- shared while_loop scaffold (all backends) -----------------------
     def _drive(self, a0, state0, *, step, state_view, finalize

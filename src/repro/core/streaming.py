@@ -29,8 +29,18 @@ JAX realisation, two tiers of its own:
   prepares round i+1 and the write stage drains round i-1 while the
   device runs round i) rides on JAX async dispatch.
 
-``ofarm`` ordering comes for free everywhere: lanes are positional and
-batched execution is deterministic.
+  The engine tier's *continuous* mode (``run(..., continuous=True)``)
+  removes the round barrier itself: the while becomes a bounded
+  early-exit segment loop, finished lanes hand their slots to the next
+  items mid-flight (the FastFlow farm's worker refill), and results
+  emit in completion order — throughput independent of the per-item
+  trip-count spread.  ``stats["wasted_lane_steps"]`` counts the
+  done-masked sweeps the barrier would have burned.
+
+``ofarm`` ordering comes for free in the round modes: lanes are
+positional and batched execution is deterministic.  Continuous mode
+emits :class:`StreamResult` (completion order, stream index attached)
+instead.
 """
 from __future__ import annotations
 
@@ -165,22 +175,54 @@ class StreamRunner:
 
 
 @dataclasses.dataclass
+class StreamResult:
+    """One continuous-mode emission: the item's stream position plus the
+    fields of :class:`~repro.core.pattern.LoopResult`.  Continuous farms
+    emit in COMPLETION order (that is the point — a 1-sweep item must not
+    wait behind a 200-sweep straggler), so the index carries the ofarm
+    identity the positional contract used to."""
+    index: int
+    a: Any
+    reduced: Any
+    iters: Any
+
+
+@dataclasses.dataclass
 class FarmEngine:
     """Lane-resident streaming farm: persistent-frame lane slots with
     device-side slot refill and host-side double buffering.
 
     ``loop`` is the per-item worker (a :class:`~repro.core.pattern.
     LoopOfStencilReduce`); ``lanes`` is the number of device-resident
-    slots.  The stream advances in *rounds*: L items are staged into the
-    slots (an O(interior) in-place refill — the frames were allocated
-    once, at stream start), the whole farm runs as ONE done-masked
-    while_loop to each lane's own trip count, and the (m, n) results are
-    sliced out.  Between rounds nothing but new input and extracted
-    output crosses the host boundary; the frames never do.
+    slots.  Two execution modes share the slots:
+
+    * **Round-based** (default): L items are staged into the slots (an
+      O(interior) in-place refill — the frames were allocated once, at
+      stream start), the whole farm runs as ONE done-masked while_loop
+      to each lane's own trip count, and the (m, n) results are sliced
+      out.  A round completes when its *slowest* lane converges — fast
+      lanes idle behind the straggler (their done-masked sweeps are
+      counted in ``stats["wasted_lane_steps"]``).
+
+    * **Continuous** (``run(..., continuous=True)``): the while_loop
+      becomes a *segmented* loop (:meth:`~repro.core.pattern.
+      LoopOfStencilReduce.lane_segment`) that returns to the dispatcher
+      as soon as any lane converges (bounded by ``segment`` body steps);
+      the dispatcher refills ONLY the finished lanes' slots in place —
+      one O(interior) dynamic_update_slice each, no re-pad, no
+      re-framing — and resumes the SAME carry.  Results are emitted as
+      :class:`StreamResult` (completion order, stream index attached)
+      the moment their lane finishes, and throughput becomes independent
+      of the trip-count spread.  One compilation serves every segment
+      and every refill of the stream.
 
     ``prep`` optionally maps a raw stream item to ``(a0, env_tuple)`` on
-    device (vmapped over lanes) — the farm's per-item read stage (e.g.
-    the §4.3 detection pass feeding restoration).
+    device (vmapped over lanes in round mode, per item in continuous
+    mode) — the farm's per-item read stage (e.g. the §4.3 detection pass
+    feeding restoration).  ``prep`` runs on the WHOLE item before any
+    spatial decomposition, so stencil-shaped preps (halo-dependent, like
+    AMF detection) see their full neighbourhood even under the composed
+    sharded deployment.
 
     Deployments:
 
@@ -189,13 +231,13 @@ class FarmEngine:
       "pallas-multistep") — lanes spread over ``mesh[lane_axis]`` via
       ``shard_map`` (the 1:1 mode across devices: each shard owns
       lanes/P slots and its own while trip count — no collectives cross
-      the lane axis).
+      the lane axis).  Both modes support this deployment.
     * ``loop.backend == "pallas-sharded"`` — the two-tier composition:
       lanes over ``lane_axis`` × each lane's frame spatially decomposed
       over ``loop.partition``'s axes (all on the same ``mesh``), with the
       lane-batched ppermute ghost exchange inside the shared while body.
-      ``prep`` is not supported here (it would run on spatially-local
-      blocks).
+      Round-based only (a spatially decomposed frame has no single-slot
+      global interior to refill).
 
     Use :meth:`run` for the full source→sink stream protocol, or
     :meth:`round` to push one stacked batch through the slots.
@@ -206,6 +248,8 @@ class FarmEngine:
     prep: Optional[Callable] = None    # item -> (a0, env tuple), on device
     mesh: Optional[Mesh] = None
     lane_axis: str = "data"
+    segment: int = 16                  # continuous mode: max body steps
+                                       # between dispatcher check-ins
 
     def __post_init__(self):
         loop = self.loop
@@ -241,21 +285,31 @@ class FarmEngine:
                     raise ValueError(
                         f"partition axis {name!r} missing from mesh "
                         f"axes {self.mesh.axis_names}")
-            if self.prep is not None:
-                raise ValueError(
-                    "prep= is not supported with pallas-sharded lanes "
-                    "(it would run on spatially-local blocks)")
-        prep = self.prep or (lambda item: (item, ()))
-        self._vprep = jax.vmap(prep)
+        if self.segment < 1:
+            raise ValueError(f"segment must be >= 1; got {self.segment}")
+        self._prep1 = self.prep or (lambda item: (item, ()))
+        self._vprep = jax.vmap(self._prep1)
         self._bound = False
+        self._mode = None               # "round" | "continuous" once used
         self._frames = None
         self._env_frames = ()
-        # one jit wrapper for the stream's lifetime: every round hits the
-        # same compilation (trace-count regression-tested); the slot
-        # buffers are donated so the refill updates them in place
+        # one jit wrapper per entry point for the stream's lifetime:
+        # every round / segment / refill hits the same compilation
+        # (trace-count regression-tested); the slot buffers are donated
+        # so refills update them in place
         self._round_fn = jax.jit(self._round_impl, donate_argnums=(0, 1))
+        self._segment_fn = jax.jit(self._segment_entry,
+                                   donate_argnums=(0, 1, 2, 3, 4))
+        self._refill_fn = jax.jit(self._refill_impl,
+                                  donate_argnums=(0, 1, 2, 3, 4))
+        self._extract_fn = jax.jit(self._extract_impl)
+        self._waste_buf: list = []      # (waste, iters) device pairs,
+                                        # converted lazily (no sync in
+                                        # the double-buffered hot path)
         self.stats = {"items": 0, "rounds": 0, "h2d_bytes": 0,
-                      "d2h_bytes": 0}
+                      "d2h_bytes": 0, "segments": 0, "refills": 0,
+                      "lane_steps": 0, "wasted_lane_steps": 0,
+                      "segment_traces": 0, "refill_traces": 0}
 
     # -- static geometry (first item binds the shapes) -------------------
     def _bind(self, item: np.ndarray):
@@ -271,6 +325,7 @@ class FarmEngine:
         self._loop = self.loop._resolve_unroll((m, n))
         loop = self._loop
         self._item_aval = items_aval
+        self._prep_avals = (a_aval, env_avals)
         self._nshards = (1 if self.mesh is None
                          else self.mesh.shape[self.lane_axis])
 
@@ -300,16 +355,26 @@ class FarmEngine:
             for name, ax in zip(part.axis_names, part.array_axes):
                 spatial[ax] = name
             self._spatial = tuple(spatial)
-            fshape = self._lspec.local.shape
-            gshape = (L,
-                      fshape[0] * (part.mesh.shape[spatial[0]]
-                                   if spatial[0] else 1),
-                      fshape[1] * (part.mesh.shape[spatial[1]]
-                                   if spatial[1] else 1))
+            arity = tuple(part.mesh.shape[s] if s else 1 for s in spatial)
+
+            def stitched(local_shape):
+                """Global shape of a lane-stacked per-shard buffer."""
+                return (L, local_shape[0] * arity[0],
+                        local_shape[1] * arity[1])
+
             self._frames = jax.device_put(
-                np.zeros(gshape, a_aval.dtype),
+                np.zeros(stitched(self._lspec.local.shape), a_aval.dtype),
                 NamedSharding(self.mesh, self._fspec()))
-            self._env_frames = ()
+            # env slots: per-shard layout matches frame_env_sharded
+            # (block-rounded interior, or full frame under temporal
+            # blocking) — prep produced the avals from WHOLE items, the
+            # spatial split happens at the shard_map boundary
+            env_local = (self._lspec.local.shape if self._eng._multistep
+                         else self._lspec.local.interior)
+            self._env_frames = tuple(
+                jax.device_put(np.zeros(stitched(env_local), e.dtype),
+                               NamedSharding(self.mesh, self._fspec()))
+                for e in env_avals)
         else:
             from .executor import StencilEngine
             from .frames import alloc_lane_env
@@ -363,19 +428,30 @@ class FarmEngine:
             in_specs=(fr_spec, env_specs, data_spec,
                       tuple(data_spec for _ in envs), P(self.lane_axis)),
             out_specs=(fr_spec, env_specs, data_spec, P(self.lane_axis),
-                       P(self.lane_axis)))
+                       P(self.lane_axis), P(self.lane_axis)))
         return fn(frames, env_frames, a0s, envs, active)
+
+    @staticmethod
+    def _round_waste(iters):
+        """Done-masked lane sweeps of one round: the barrier runs every
+        lane to the round's slowest trip count, so a lane that finished
+        at ``it_i`` idled for ``max(it) - it_i`` sweeps (premasked
+        padding lanes idle the whole round).  Shape (1,): per-shard under
+        shard_map, summed on the host."""
+        lanes = iters.shape[0]
+        return (lanes * jnp.max(iters) - jnp.sum(iters))[None]
 
     def _local_round(self, frames, env_frames, interiors, envs, active):
         """The device-side round (directly, or per-shard inside
         shard_map): in-place slot refill → ONE done-masked lane
         while_loop → O(interior) result slices.  Returns
-        (frames', env_frames', outs, reduced, iters)."""
+        (frames', env_frames', outs, reduced, iters, waste)."""
         loop = self._loop
         done0 = jnp.logical_not(active)
         if loop.backend == "jnp":
             res = loop.farm_run(interiors, env=envs, done0=done0)
-            return frames, env_frames, res.a, res.reduced, res.iters
+            return (frames, env_frames, res.a, res.reduced, res.iters,
+                    self._round_waste(res.iters))
         eng, lspec = self._eng, self._lspec
         frames, env_frames = eng.refill_lanes(frames, env_frames,
                                               interiors, envs, lspec)
@@ -384,7 +460,8 @@ class FarmEngine:
             step=lambda fr: eng.sweeps_lanes(fr, env_frames, lspec),
             finalize=lambda fr: fr, done0=done0)
         outs = eng.unframe_lanes(res.a, lspec)
-        return res.a, env_frames, outs, res.reduced, res.iters
+        return (res.a, env_frames, outs, res.reduced, res.iters,
+                self._round_waste(res.iters))
 
     def round(self, items, count: Optional[int] = None):
         """Push one stacked (≤ lanes, ...) batch through the slots.
@@ -399,6 +476,10 @@ class FarmEngine:
         if count > self.lanes:
             raise ValueError(f"batch of {count} items exceeds "
                              f"lanes={self.lanes}")
+        if self._mode == "continuous":
+            raise ValueError("engine already streamed in continuous mode;"
+                             " build a fresh FarmEngine for rounds")
+        self._mode = "round"
         if not self._bound:
             self._bind(items[0])
         elif (items.shape[1:] != self._item_aval.shape[1:]
@@ -424,12 +505,283 @@ class FarmEngine:
             active = jnp.asarray(np.arange(self.lanes) < count)
         self.stats["rounds"] += 1
         self.stats["items"] += count
-        self._frames, self._env_frames, outs, red, iters = self._round_fn(
+        (self._frames, self._env_frames, outs, red, iters,
+         waste) = self._round_fn(
             self._frames, self._env_frames, jnp.asarray(items), active)
+        self._waste_buf.append((waste, iters))   # converted lazily
+        if len(self._waste_buf) > 64:            # bound the buffer on
+            self._flush_waste(keep=2)            # long streams; the old
+                                                 # rounds are long done
         return outs[:count], red[:count], iters[:count]
 
+    # -- lane-step/waste accounting shared by both modes -----------------
+    def _flush_waste(self, keep: int = 0):
+        """Fold buffered per-round (waste, iters) device pairs into the
+        stats — deferred so ``round()`` never forces a host sync inside
+        the double-buffered stream.  ``keep`` leaves the newest entries
+        buffered (their rounds may still be in flight)."""
+        while len(self._waste_buf) > keep:
+            waste, iters = self._waste_buf.pop(0)
+            w = int(np.asarray(waste).sum())
+            u = int(np.asarray(iters).sum())
+            self.stats["wasted_lane_steps"] += w
+            self.stats["lane_steps"] += w + u
+
+    @property
+    def wasted_lane_steps(self) -> int:
+        """Total done-masked / idle-slot lane sweeps executed so far —
+        the straggler-barrier metric continuous mode exists to shrink."""
+        self._flush_waste()
+        return self.stats["wasted_lane_steps"]
+
+    @property
+    def lane_steps(self) -> int:
+        """Total lane sweeps executed (useful + wasted)."""
+        self._flush_waste()
+        return self.stats["lane_steps"]
+
+    # -- continuous mode: segmented loop + per-slot refill ---------------
+    def _lane_step(self, env_frames):
+        """The per-body-step farm advance for the resident carry: the
+        vmapped persistent-kernel sweep (pallas backends) or the vmapped
+        shift-algebra step (jnp — the (lanes, m, n) stack IS the carry).
+        """
+        loop = self._loop
+        if loop.backend == "jnp":
+            return loop._lane_step_jnp(env_frames)
+        return lambda fr: self._eng.sweeps_lanes(fr, env_frames,
+                                                 self._lspec)
+
+    def _local_segment(self, frames, env_frames, r, it, done):
+        """One bounded early-exit slice of the resident lane loop
+        (directly, or per-shard inside shard_map).  Returns the resumed
+        carry plus the (1,) body-step count — per shard, because lane
+        shards exit their segments independently (no collectives cross
+        the lane axis)."""
+        loop = self._loop
+        (a, r, it, done), steps = loop.lane_segment(
+            (frames, r, it, done), step=self._lane_step(env_frames),
+            segment=self.segment)
+        return a, env_frames, r, it, done, steps[None]
+
+    def _segment_entry(self, frames, env_frames, r, it, done):
+        self.stats["segment_traces"] += 1      # traced once per stream
+        if self.mesh is None:
+            return self._local_segment(frames, env_frames, r, it, done)
+        from repro.sharding.specs import shard_map
+
+        lane_spec = P(self.lane_axis)
+        env_specs = tuple(lane_spec for _ in env_frames)
+        fn = shard_map(
+            self._local_segment, mesh=self.mesh,
+            in_specs=(lane_spec, env_specs, lane_spec, lane_spec,
+                      lane_spec),
+            out_specs=(lane_spec, env_specs, lane_spec, lane_spec,
+                       lane_spec, lane_spec))
+        return fn(frames, env_frames, r, it, done)
+
+    def _refill_impl(self, frames, env_frames, r, it, done, idx, item):
+        """Hand ONE finished lane's slot (dynamic index) to the next
+        stream item and re-arm its carry — O(interior) writes, no pad,
+        no re-framing, one compilation for every refill.  ``prep`` runs
+        here, on the whole item (halo-aware by construction)."""
+        self.stats["refill_traces"] += 1       # traced once per stream
+        from .frames import refill_slot_env, refill_slot_frame
+
+        loop = self._loop
+        a0, envs = self._prep1(item)
+        if loop.backend == "jnp":
+            frames = jax.lax.dynamic_update_slice(
+                frames, a0[None].astype(frames.dtype), (idx, 0, 0))
+            env_frames = tuple(
+                jax.lax.dynamic_update_slice(
+                    ef, e[None].astype(ef.dtype), (idx,) + (0,) * e.ndim)
+                for ef, e in zip(env_frames, envs))
+        else:
+            spec = self._lspec.frame
+            frames = refill_slot_frame(frames, a0, idx, spec,
+                                       loop.boundary)
+            env_frames = tuple(
+                refill_slot_env(ef, e, idx, spec, loop.boundary,
+                                halo=self._eng._halo_env)
+                for ef, e in zip(env_frames, envs))
+        r = r.at[idx].set(jnp.asarray(loop._id, r.dtype))
+        it = it.at[idx].set(0)
+        done = done.at[idx].set(False)
+        return frames, env_frames, r, it, done
+
+    def _extract_impl(self, frames, idx):
+        """Slice ONE lane's (m, n) domain out at a dynamic index — the
+        only per-item device→host payload of the continuous path."""
+        if self._loop.backend == "jnp":
+            return jax.lax.dynamic_index_in_dim(frames, idx, axis=0,
+                                                keepdims=False)
+        spec = self._lspec.frame
+        p = spec.pad
+        return jax.lax.dynamic_slice(
+            frames, (idx, p, p), (1, spec.m, spec.n))[0]
+
+    def _check_item(self, item: np.ndarray):
+        if (item.shape != self._item_aval.shape[1:]
+                or item.dtype != self._item_aval.dtype):
+            raise ValueError(
+                f"stream item shape changed mid-stream: slots are bound "
+                f"to {self._item_aval.shape[1:]}/{self._item_aval.dtype},"
+                f" got {item.shape}/{item.dtype} (build a fresh "
+                "FarmEngine per item geometry)")
+
+    def _bind_continuous(self):
+        """Allocate the continuous carry around the bound slots: the jnp
+        backend's resident (lanes, m, n) stack (the pallas backends reuse
+        the lane frames ``_bind`` staged) plus the per-lane (r, it, done)
+        vectors — all slots start retired (done, unoccupied)."""
+        loop = self._loop
+        if loop.backend == "pallas-sharded":
+            raise ValueError(
+                "continuous mode does not compose with pallas-sharded "
+                "lanes yet (a spatially decomposed frame has no single-"
+                "slot global interior to refill); use round-based run() "
+                "or spread lanes over the mesh with a single-device "
+                "backend")
+        if getattr(self, "_cont_carry", None) is not None:
+            return          # slots + carry persist across streams: the
+                            # end state (all lanes retired) is exactly a
+                            # valid start state for the next stream
+        a_aval, env_avals = self._prep_avals
+        L = self.lanes
+        if loop.backend == "jnp":
+            frames = np.zeros(a_aval.shape, a_aval.dtype)
+            envs = tuple(np.zeros(e.shape, e.dtype) for e in env_avals)
+            if self.mesh is None:
+                self._frames = jnp.asarray(frames)
+                self._env_frames = tuple(jnp.asarray(e) for e in envs)
+            else:
+                lane_sh = NamedSharding(self.mesh, P(self.lane_axis))
+                self._frames = jax.device_put(frames, lane_sh)
+                self._env_frames = tuple(
+                    jax.device_put(e, lane_sh) for e in envs)
+        r_aval = jax.eval_shape(
+            lambda fr, ef: self._lane_step(ef)(fr)[1],
+            self._frames, self._env_frames)
+        r0 = np.full((L,), loop._id, np.dtype(r_aval.dtype))
+        it0 = np.zeros((L,), np.int32)
+        d0 = np.ones((L,), bool)
+        if self.mesh is None:
+            carry = tuple(jnp.asarray(x) for x in (r0, it0, d0))
+        else:
+            lane_sh = NamedSharding(self.mesh, P(self.lane_axis))
+            carry = tuple(jax.device_put(x, lane_sh)
+                          for x in (r0, it0, d0))
+        self._cont_carry = carry
+
+    def run_continuous(self, source, sink) -> int:
+        """Drive a whole stream with continuous per-lane refill.
+
+        ``sink`` receives one :class:`StreamResult` per item, in
+        COMPLETION order (``.index`` is the stream position).  Protocol:
+        the farm advances in bounded segments; the moment a lane's
+        convergence loop finishes, its (m, n) result is extracted, the
+        next queued item takes over the slot in place, and the SAME
+        carry resumes — the other lanes never notice.  One compilation
+        serves every segment, refill and extraction.
+        """
+        stream = iter(source() if callable(source) else source)
+        first = next(stream, None)
+        if first is None:
+            return 0
+        if self._mode == "round":
+            raise ValueError("engine already streamed in round mode; "
+                             "build a fresh FarmEngine for continuous")
+        self._mode = "continuous"
+        first = np.asarray(first)
+        if not self._bound:
+            self._bind(first)
+        self._bind_continuous()
+        loop = self._loop
+        L, unroll = self.lanes, loop.unroll
+        frames, env_frames = self._frames, self._env_frames
+        r, itv, done = self._cont_carry
+        occupants: list = [None] * L      # slot -> stream index
+        prev_it = np.zeros((L,), np.int64)
+        pending, n_out, next_index = first, 0, 0
+
+        def next_item():
+            nonlocal pending
+            if pending is not None:
+                x, pending = pending, None
+                return x
+            x = next(stream, None)
+            return None if x is None else np.asarray(x)
+
+        def refill(slot, item):
+            nonlocal frames, env_frames, r, itv, done, next_index
+            self._check_item(item)
+            frames, env_frames, r, itv, done = self._refill_fn(
+                frames, env_frames, r, itv, done,
+                jnp.asarray(slot, jnp.int32), jnp.asarray(item))
+            occupants[slot] = next_index
+            next_index += 1
+            prev_it[slot] = 0
+            self.stats["h2d_bytes"] += item.nbytes
+            self.stats["refills"] += 1
+
+        try:
+            for slot in range(L):
+                item = next_item()
+                if item is None:
+                    break
+                refill(slot, item)
+            # retired slots may carry iteration counts from a previous
+            # stream — baseline the useful-work deltas on the real carry
+            prev_it = np.asarray(itv).astype(np.int64)
+
+            local_L = L // self._nshards
+            while any(o is not None for o in occupants):
+                (frames, env_frames, r, itv, done,
+                 steps) = self._segment_fn(frames, env_frames, r, itv,
+                                           done)
+                self.stats["segments"] += 1
+                done_h = np.asarray(done)
+                it_h = np.asarray(itv).astype(np.int64)
+                r_h = np.asarray(r)
+                steps_h = np.asarray(steps).astype(np.int64)
+                # lane-step accounting: every body step advances (or
+                # idles) every lane of its shard by `unroll` sweeps
+                for s in range(self._nshards):
+                    sl = slice(s * local_L, (s + 1) * local_L)
+                    total = int(steps_h[s]) * unroll * local_L
+                    useful = int((it_h[sl] - prev_it[sl]).sum())
+                    self.stats["lane_steps"] += total
+                    self.stats["wasted_lane_steps"] += total - useful
+                prev_it = it_h.copy()
+                finished = done_h | (it_h >= loop.max_iters)
+                for slot in range(L):
+                    if occupants[slot] is None or not finished[slot]:
+                        continue
+                    out = np.asarray(self._extract_fn(
+                        frames, jnp.asarray(slot, jnp.int32)))
+                    self.stats["d2h_bytes"] += (out.nbytes
+                                                + r_h[slot].nbytes + 4)
+                    sink(StreamResult(index=occupants[slot], a=out,
+                                      reduced=r_h[slot],
+                                      iters=np.int32(it_h[slot])))
+                    n_out += 1
+                    occupants[slot] = None
+                    item = next_item()
+                    if item is not None:
+                        refill(slot, item)
+        finally:
+            # locals always name the LIVE buffers (the donated inputs
+            # were consumed by the calls that produced these), so a
+            # raising sink / shape check cannot strand the engine on
+            # deleted device buffers
+            self._frames, self._env_frames = frames, env_frames
+            self._cont_carry = (r, itv, done)
+        self.stats["items"] += n_out
+        return n_out
+
     # -- the stream protocol (read ∥ compute ∥ write) --------------------
-    def run(self, source, sink) -> int:
+    def run(self, source, sink, *, continuous: bool = False) -> int:
         """Drive a whole stream: ``source`` yields items (callable
         returning an iterator, or an iterable), ``sink`` consumes one
         :class:`~repro.core.pattern.LoopResult` per item, in order.
@@ -437,7 +789,14 @@ class FarmEngine:
         Host-side double buffering: round i's dispatch is asynchronous,
         so the host drains round i-1 into the sink (and reads round
         i+1's items) while the device runs round i.
+
+        With ``continuous=True`` the stream runs in continuous per-lane
+        refill mode instead (see :meth:`run_continuous`): the sink
+        receives :class:`StreamResult` objects in completion order and
+        no lane ever idles behind a straggler in another slot.
         """
+        if continuous:
+            return self.run_continuous(source, sink)
         it = iter(source() if callable(source) else source)
         n = 0
         inflight = None

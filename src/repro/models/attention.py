@@ -104,7 +104,9 @@ def attention(params: Params, x, *, positions, num_heads, num_kv_heads,
             k = apply_rope(k, positions, rope_theta)
         if kv_cache is not None and "pos" in kv_cache:
             # ring buffer (sliding-window layers): slot = position mod W
-            rk, rv, pos_arr = _ring_write(kv_cache, k, v, positions)
+            ragged = cache_pos is not None and cache_pos.shape[0] > 1
+            rk, rv, pos_arr = _ring_write(kv_cache, k, v, positions,
+                                          ragged=ragged)
             new_cache = {"k": rk, "v": rv, "pos": pos_arr}
             if S > 1:
                 # prefill chunk: queries attend the chunk's OWN keys
@@ -177,16 +179,34 @@ def attention(params: Params, x, *, positions, num_heads, num_kv_heads,
     return out, new_cache
 
 
-def _ring_write(cache, k, v, positions):
+def _ring_write(cache, k, v, positions, ragged: bool = False):
     """Write S_new keys into the W-slot ring at slots ``pos mod W``.
 
     Keys are stored post-RoPE (absolute positions), so the ring only has
     to remember each slot's absolute position for masking; empty slots
     hold -1 and are masked out.  When S_new ≥ W only the last W entries
     survive (anything older is outside the window by construction).
+
+    ``ragged`` (continuous batching, S_new == 1): every sequence decodes
+    at its own depth, so each writes its own ring slot — a vmapped
+    single-slot write instead of the shared-index fast path.
     """
     W = cache["k"].shape[1]
     S_new = k.shape[1]
+    if ragged:
+        if S_new != 1:
+            raise ValueError(
+                "per-sequence ring writes are decode-only (S_new == 1); "
+                "continuous prefill stages one sequence at a time")
+        pos = positions[:, 0].astype(jnp.int32)          # (B,)
+        idx = pos % W
+
+        def one(ck, cv, cp, kk, vv, ii, pp):
+            return (ck.at[ii].set(kk.astype(ck.dtype)),
+                    cv.at[ii].set(vv.astype(cv.dtype)),
+                    cp.at[ii].set(pp))
+        return jax.vmap(one)(cache["k"], cache["v"], cache["pos"],
+                             k[:, 0], v[:, 0], idx, pos)
     pos_row = positions[0]                        # uniform across batch
     if S_new >= W:
         keep = slice(S_new - W, S_new)
@@ -208,13 +228,21 @@ def _ring_write(cache, k, v, positions):
 def _scatter_cache(cache, new, cache_pos):
     """Write (B, S_new, KH, hd) at step ``cache_pos`` into the cache.
 
-    ``cache_pos`` is (B, 1) with a uniform step index across the batch
-    (standard batched decode); the slice write keeps the update a cheap
-    dynamic-update-slice instead of a scatter.
+    ``cache_pos`` is (1, 1) when the step index is uniform across the
+    batch (standard batched decode / prefill — the slice write stays one
+    cheap dynamic-update-slice), or (B, 1) with per-sequence indices
+    (continuous batching: every slot decodes at its own depth, so each
+    sequence writes its own cache row position via a vmapped slice
+    write).
     """
-    pos0 = cache_pos.reshape(-1)[0]
-    return jax.lax.dynamic_update_slice_in_dim(
-        cache, new.astype(cache.dtype), pos0, axis=1)
+    if cache_pos.shape[0] == 1:
+        pos0 = cache_pos.reshape(-1)[0]
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, new.astype(cache.dtype), pos0, axis=1)
+    return jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
+            c, n.astype(c.dtype), p, axis=0)
+    )(cache, new, cache_pos.reshape(-1))
 
 
 def init_kv_cache(batch, max_seq, num_kv_heads, head_dim,

@@ -388,11 +388,24 @@ def prefill_cross_caches(cfg: ArchConfig, params: Params, enc_out):
 def step_with_cache(cfg: ArchConfig, params: Params, caches, tokens, pos,
                     patch_embeds=None, enc_out=None, cross_caches=None):
     """Forward S tokens (S=1 decode, S>1 prefill) writing the cache at
-    ``pos``.  Returns (logits, new_caches)."""
+    ``pos``.  Returns (logits, new_caches).
+
+    ``pos`` is a scalar for the uniform case (standard batched decode /
+    prefill: every sequence at the same depth) or a (B, 1) int array for
+    per-sequence depths (continuous batching — each KV slot holds a
+    sequence admitted at a different time); positions, RoPE, the causal
+    mask and the cache writes all follow per sequence.  Per-sequence
+    ``pos`` requires relative position handling (RoPE/none) — absolute
+    position embeddings index a table with the uniform offset.
+    """
+    if jnp.ndim(pos) != 0 and cfg.abs_pos_embed:
+        raise ValueError(
+            "per-sequence positions are not supported with absolute "
+            "position embeddings (the pos_embed table is indexed by a "
+            "uniform batch offset); use a scalar pos")
     x, positions = embed_inputs(cfg, params, tokens, patch_embeds,
                                 pos_offset=pos)
-    B = x.shape[0]
-    cache_pos = jnp.full((B, 1), pos, jnp.int32) if jnp.ndim(pos) == 0 \
+    cache_pos = jnp.full((1, 1), pos, jnp.int32) if jnp.ndim(pos) == 0 \
         else pos
     pattern = (cfg.decoder_pattern() if cfg.is_encoder_decoder
                else cfg.block_pattern())

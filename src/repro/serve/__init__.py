@@ -1,3 +1,3 @@
-from .engine import GenerateConfig, generate, prefill
+from .engine import ContinuousEngine, GenerateConfig, generate, prefill
 
-__all__ = ["GenerateConfig", "generate", "prefill"]
+__all__ = ["ContinuousEngine", "GenerateConfig", "generate", "prefill"]

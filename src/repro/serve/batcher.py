@@ -36,6 +36,8 @@ from .engine import GenerateConfig, generate
 class Request:
     rid: int
     prompt: np.ndarray           # (len,) int32
+    max_new_tokens: Optional[int] = None   # per-request budget; None =
+                                           # the engine's gcfg cap
 
 
 @dataclasses.dataclass
@@ -105,4 +107,34 @@ class Batcher:
                 break
         if inflight is not None:
             self._drain(inflight, out)
+        return out
+
+    def run_continuous(self) -> List[Result]:
+        """Drain the queue with continuous batching (per-sequence KV-slot
+        refill, :class:`repro.serve.engine.ContinuousEngine`).
+
+        Requests still group by EXACT prompt length (the no-pad
+        contract), but within a group the whole queue streams through
+        ``max_batch`` persistent slots: a finished sequence's result is
+        emitted mid-batch — before the longest sequence of its cohort
+        completes — and its KV slot is immediately prefilled with the
+        next queued request.  Results arrive in completion order.  The
+        engines used are kept on ``self.engines`` (one per prompt-length
+        group) so callers can inspect ``stats`` — e.g. that segment and
+        prefill trace counts stayed at 1.
+        """
+        from .engine import ContinuousEngine
+
+        out: List[Result] = []
+        self.engines: List[ContinuousEngine] = []
+        while self._queue:
+            L = len(self._queue[0].prompt)      # FIFO head sets the group
+            group = [r for r in self._queue if len(r.prompt) == L]
+            self._queue = [r for r in self._queue if len(r.prompt) != L]
+            eng = ContinuousEngine(
+                self.cfg, self.params, self.gcfg, slots=self.max_batch,
+                cache_dtype=self.cache_dtype)
+            eng.run(group, lambda rid, toks: out.append(
+                Result(rid=rid, tokens=toks)))
+            self.engines.append(eng)
         return out

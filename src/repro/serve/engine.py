@@ -28,6 +28,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.pattern import LoopOfStencilReduce
@@ -112,3 +113,240 @@ def generate(cfg: ArchConfig, params, prompt, gcfg: GenerateConfig, *,
 def generate_jit(cfg: ArchConfig, gcfg: GenerateConfig, **kw):
     """Jit-compiled generate closure (static cfg/gcfg)."""
     return jax.jit(functools.partial(generate, cfg, gcfg=gcfg, **kw))
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching — per-sequence KV-slot refill.
+# ---------------------------------------------------------------------------
+
+
+class ContinuousEngine:
+    """Continuous-batching decode: persistent KV-cache slots with
+    per-sequence refill — the serve-side twin of the farm tier's
+    continuous lane refill (:meth:`repro.core.streaming.FarmEngine.
+    run_continuous`).
+
+    ``slots`` KV-cache lanes persist on device.  Decode advances in
+    bounded *segments* (the :func:`repro.core.pattern.segmented_while`
+    tier: control returns to the dispatcher as soon as any sequence
+    newly finishes, or after ``segment`` steps).  A finished sequence's
+    tokens are emitted immediately — not at the batch barrier — and its
+    KV slot is handed to the next queued request mid-batch: the
+    newcomer's prompt is prefilled into the slot (one whole-slot cache
+    write, which also evicts any stale keys of the previous occupant)
+    while the other sequences keep decoding at their own depths
+    (per-sequence cache positions, RoPE and masks — see
+    :func:`repro.models.transformer.step_with_cache`).
+
+    One compilation serves every segment and every slot prefill of a
+    stream (``stats["segment_traces"]`` / ``stats["prefill_traces"]``
+    count trace events; both stay 1 after the first request).
+
+    Constraints: all requests of one engine share an exact prompt length
+    (the Batcher's grouping contract — no pad tokens ever enter the
+    causal past), per-request ``max_new_tokens`` is capped by the
+    engine-level ``gcfg.max_new_tokens`` (the slot width), and models
+    with absolute position embeddings, encoders or vision prefixes are
+    not supported (their position bookkeeping is not per-sequence).
+    """
+
+    def __init__(self, cfg: ArchConfig, params, gcfg: GenerateConfig, *,
+                 slots: int = 8, cache_dtype=jnp.bfloat16,
+                 segment: int = 8):
+        if cfg.abs_pos_embed or cfg.is_encoder_decoder or \
+                cfg.vision_patches:
+            raise ValueError(
+                "continuous batching needs per-sequence positions; "
+                "absolute position embeddings, encoder-decoder and "
+                "vision-prefix models are round-based only")
+        if segment < 1:
+            raise ValueError(f"segment must be >= 1; got {segment}")
+        self.cfg, self.params, self.gcfg = cfg, params, gcfg
+        self.slots, self.cache_dtype = slots, cache_dtype
+        self.segment = segment
+        self._bound = False
+        self._segment_fn = jax.jit(self._segment_impl,
+                                   donate_argnums=(1, 2, 3, 4, 5, 6))
+        self._prefill_fn = jax.jit(self._prefill_impl,
+                                   donate_argnums=(1, 2, 3, 4, 5, 6))
+        self.stats = {"requests": 0, "segments": 0, "prefills": 0,
+                      "emitted": 0, "segment_traces": 0,
+                      "prefill_traces": 0}
+
+    # -- static geometry (first prompt binds the shapes) -----------------
+    def _bind(self, prompt_len: int):
+        B, cap = self.slots, self.gcfg.max_new_tokens
+        self._S0 = prompt_len
+        self._max_seq = prompt_len + cap
+        self._caches = T.init_cache(self.cfg, B, self._max_seq,
+                                    self.cache_dtype)
+        self._out = jnp.zeros((B, cap), jnp.int32)
+        self._done = jnp.ones((B,), bool)
+        self._t = jnp.ones((B,), jnp.int32)     # tokens generated
+        self._budget = jnp.ones((B,), jnp.int32)
+        self._keys = jnp.zeros((B, 2), jnp.uint32)
+        self._bound = True
+
+    def _sample(self, logits, key):
+        if self.gcfg.temperature > 0:
+            return jax.random.categorical(
+                key, logits / self.gcfg.temperature, axis=-1)
+        return jnp.argmax(logits, axis=-1)
+
+    # -- slot prefill: hand a finished slot to the next request ----------
+    def _prefill_impl(self, params, caches, out, done, t, budget, keys,
+                      idx, prompt, bud, key):
+        """Admit one request into slot ``idx`` (dynamic): prefill its
+        prompt into a fresh single-sequence cache, write that cache over
+        the slot (one whole-slot dynamic_update_slice per leaf — this is
+        the slot hand-off, and it evicts the previous occupant's stale
+        keys wholesale), sample the first token, and re-arm the slot's
+        carry.  One compilation serves every admission."""
+        self.stats["prefill_traces"] += 1       # traced once per stream
+        fresh = T.init_cache(self.cfg, 1, self._max_seq, self.cache_dtype)
+        logits, fresh = T.step_with_cache(self.cfg, params, fresh,
+                                          prompt[None], 0)
+        first = self._sample(logits[:, -1], key)[0]
+
+        def slot_write(axis):
+            return lambda b, f: jax.lax.dynamic_update_slice_in_dim(
+                b, f.astype(b.dtype), idx, axis=axis)
+        caches = {"prefix": jax.tree.map(slot_write(0), caches["prefix"],
+                                         fresh["prefix"]),
+                  "unit": jax.tree.map(slot_write(1), caches["unit"],
+                                       fresh["unit"])}
+        out = out.at[idx].set(0).at[idx, 0].set(first.astype(jnp.int32))
+        done = done.at[idx].set(
+            jnp.logical_or(first == self.gcfg.eos_id, bud <= 1))
+        t = t.at[idx].set(1)
+        budget = budget.at[idx].set(bud)
+        keys = keys.at[idx].set(key)
+        return caches, out, done, t, budget, keys
+
+    # -- one bounded decode segment --------------------------------------
+    def _segment_impl(self, params, caches, out, done, t, budget, keys):
+        """Advance every live slot up to ``segment`` decode steps,
+        returning as soon as any sequence newly finishes (EOS or its own
+        token budget).  Per-sequence positions: slot b reads its last
+        token at out[b, t_b-1] and writes the cache at S0 + t_b - 1."""
+        self.stats["segment_traces"] += 1       # traced once per stream
+        from repro.core.pattern import segmented_while
+
+        B, cap = self.slots, self.gcfg.max_new_tokens
+        eos = self.gcfg.eos_id
+
+        def body(carry):
+            caches, out, done, t, keys = carry
+            live = jnp.logical_not(done)
+            tok = jnp.take_along_axis(out, (t - 1)[:, None], axis=1)
+            pos = (self._S0 + t - 1)[:, None]            # (B, 1)
+            logits, caches = T.decode_step(self.cfg, params, caches,
+                                           tok, pos)
+            if self.gcfg.temperature > 0:
+                nk = jax.vmap(jax.random.split)(keys)    # (B, 2, 2)
+                keys = jnp.where(live[:, None], nk[:, 0], keys)
+                nxt = jax.vmap(
+                    lambda lg, kk: self._sample(lg, kk))(logits[:, 0],
+                                                         nk[:, 1])
+            else:
+                nxt = jnp.argmax(logits[:, 0], axis=-1)
+            nxt = jnp.where(live, nxt, jnp.full_like(nxt, eos))
+            tw = jnp.minimum(t, cap - 1)
+            row = jnp.arange(B)
+            out = out.at[row, tw].set(
+                jnp.where(live, nxt.astype(jnp.int32), out[row, tw]))
+            t = jnp.where(live, t + 1, t)
+            done = jnp.logical_or(
+                done, jnp.logical_and(
+                    live, jnp.logical_or(nxt == eos, t >= budget)))
+            return caches, out, done, t, keys
+
+        (caches, out, done, t, keys), steps = segmented_while(
+            body, (caches, out, done, t, keys),
+            finished=lambda c: c[2], segment=self.segment)
+        return caches, out, done, t, budget, keys, steps
+
+    # -- the dispatcher ---------------------------------------------------
+    def run(self, requests, emit) -> int:
+        """Serve ``requests`` (same prompt length; ``.max_new_tokens``
+        may differ wildly) through the slots, calling ``emit(rid,
+        tokens)`` the moment each finishes — completion order, mid-batch.
+        Returns the number of emissions."""
+        queue = list(requests)
+        if not queue:
+            return 0
+        S0 = len(queue[0].prompt)
+        cap = self.gcfg.max_new_tokens
+
+        def budget_of(req) -> int:
+            bud = getattr(req, "max_new_tokens", None)
+            return cap if bud is None else bud
+
+        for r in queue:
+            if len(r.prompt) != S0:
+                raise ValueError(
+                    "one ContinuousEngine serves one exact prompt "
+                    f"length; got {len(r.prompt)} != {S0} (group "
+                    "upstream, as Batcher does)")
+            bud = budget_of(r)
+            if not 1 <= bud <= cap:
+                raise ValueError(
+                    f"request budget {bud} outside [1, "
+                    f"gcfg.max_new_tokens={cap}] (the slot width)")
+        if not self._bound:
+            self._bind(S0)
+        elif S0 != self._S0:
+            raise ValueError(
+                f"engine bound to prompt length {self._S0}; got {S0}")
+        queue = queue[::-1]                     # pop() = FIFO order
+        caches, out, done = self._caches, self._out, self._done
+        t, budget, keys = self._t, self._budget, self._keys
+        occupants = [None] * self.slots
+        base_key = jax.random.PRNGKey(self.gcfg.seed)
+        n_emit = 0
+
+        def admit(slot, req):
+            nonlocal caches, out, done, t, budget, keys
+            bud = budget_of(req)
+            key = jax.random.fold_in(base_key, self.stats["prefills"])
+            caches, out, done, t, budget, keys = self._prefill_fn(
+                self.params, caches, out, done, t, budget, keys,
+                jnp.asarray(slot, jnp.int32),
+                jnp.asarray(np.asarray(req.prompt), jnp.int32),
+                jnp.asarray(bud, jnp.int32), key)
+            occupants[slot] = req
+            self.stats["prefills"] += 1
+            self.stats["requests"] += 1
+
+        try:
+            for slot in range(self.slots):
+                if not queue:
+                    break
+                admit(slot, queue.pop())
+
+            while any(o is not None for o in occupants):
+                (caches, out, done, t, budget, keys,
+                 _steps) = self._segment_fn(self.params, caches, out,
+                                            done, t, budget, keys)
+                self.stats["segments"] += 1
+                done_h = np.asarray(done)
+                t_h = np.asarray(t)
+                out_h = np.asarray(out)
+                for slot in range(self.slots):
+                    if occupants[slot] is None or not done_h[slot]:
+                        continue
+                    req = occupants[slot]
+                    emit(req.rid, out_h[slot, :int(t_h[slot])].copy())
+                    n_emit += 1
+                    self.stats["emitted"] += 1
+                    occupants[slot] = None
+                    if queue:
+                        admit(slot, queue.pop())
+        finally:
+            # locals always name the LIVE buffers (the donated inputs
+            # were consumed by the calls that produced these), so a
+            # raising emit callback cannot strand the engine on deleted
+            # device buffers
+            self._caches, self._out, self._done = caches, out, done
+            self._t, self._budget, self._keys = t, budget, keys
+        return n_emit

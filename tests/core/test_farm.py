@@ -241,6 +241,288 @@ class TestLaneSlotReuse:
         assert "pad" not in names
 
 
+def countdown(get, *_):
+    """Every cell decrements by 1 per sweep — an item whose max value is
+    v converges in EXACTLY v sweeps (cond: max < 0.5), so trip-count
+    spreads are programmable per item."""
+    return get(0, 0) - 1.0
+
+
+def mk_countdown(backend, max_iters=256, unroll=1):
+    return LoopOfStencilReduce(
+        f=countdown, k=1, combine="max", cond=lambda r: r < 0.5,
+        boundary="zero", max_iters=max_iters, unroll=unroll,
+        backend=backend, interpret=True, block=(32, 128))
+
+
+def trip_items(trips, shape=(8, 128)):
+    """Stream items with the given per-item trip counts."""
+    base = np.linspace(0.1, 0.9, shape[0] * shape[1], dtype=np.float32)
+    base = base.reshape(shape)
+    return [base + float(t) - 1.0 for t in trips]
+
+
+SPREADS = {
+    "uniform": [6, 6, 6, 6, 6, 6],
+    "bimodal": [1, 200, 1, 200, 1, 1],
+    "straggler": [2, 2, 2, 200, 2, 2],
+}
+
+
+class TestContinuousFarm:
+    """The tentpole acceptance: continuous refill matches the round farm
+    and the sequential reference item for item, while strictly cutting
+    the done-masked lane sweeps the straggler barrier burns."""
+
+    @pytest.mark.parametrize("spread", list(SPREADS))
+    def test_parity_and_waste_drop_jnp(self, spread):
+        trips = SPREADS[spread]
+        items = trip_items(trips)
+        loop = mk_countdown("jnp")
+
+        # sequential reference: farm(run) over the stacked batch
+        want = farm(loop.run)(jnp.stack(items))
+        np.testing.assert_array_equal(np.asarray(want.iters), trips)
+
+        eng_round = FarmEngine(loop, lanes=2)
+        round_outs = []
+        assert eng_round.run(items, round_outs.append) == len(items)
+
+        eng_cont = FarmEngine(loop, lanes=2, segment=8)
+        cont_outs = []
+        assert eng_cont.run(items, cont_outs.append,
+                            continuous=True) == len(items)
+        cont_outs.sort(key=lambda r: r.index)
+
+        for i, (ro, co) in enumerate(zip(round_outs, cont_outs)):
+            assert co.index == i
+            assert int(ro.iters) == int(co.iters) == trips[i]
+            np.testing.assert_array_equal(np.asarray(ro.a), co.a)
+            np.testing.assert_array_equal(np.asarray(want.a[i]), co.a)
+
+        # the metric: total lane sweeps strictly drop whenever the
+        # spread gives the barrier something to waste
+        assert eng_cont.lane_steps <= eng_round.lane_steps
+        if spread != "uniform":
+            assert eng_cont.lane_steps < eng_round.lane_steps
+            assert (eng_cont.stats["wasted_lane_steps"]
+                    < eng_round.stats["wasted_lane_steps"])
+
+    @pytest.mark.parametrize("backend,unroll",
+                             [("pallas", 1), ("pallas-multistep", 3)])
+    def test_parity_and_waste_drop_pallas(self, backend, unroll):
+        trips = [3, 42, 3, 3, 42, 3]
+        items = trip_items(trips)
+        loop = mk_countdown(backend, max_iters=60, unroll=unroll)
+
+        eng_round = FarmEngine(loop, lanes=2)
+        round_outs = []
+        assert eng_round.run(items, round_outs.append) == len(items)
+
+        eng_cont = FarmEngine(loop, lanes=2, segment=6)
+        cont_outs = []
+        assert eng_cont.run(items, cont_outs.append,
+                            continuous=True) == len(items)
+        cont_outs.sort(key=lambda r: r.index)
+        for i, (ro, co) in enumerate(zip(round_outs, cont_outs)):
+            assert int(ro.iters) == int(co.iters)
+            np.testing.assert_allclose(np.asarray(ro.a), co.a, atol=1e-5)
+        assert eng_cont.wasted_lane_steps < eng_round.wasted_lane_steps
+
+    def test_completion_order_beats_the_barrier(self):
+        """A 1-sweep item sharing a cohort with a 200-sweep straggler is
+        emitted FIRST in continuous mode — the round barrier would hold
+        it until the straggler converged."""
+        items = trip_items([200, 1, 1, 1])
+        eng = FarmEngine(mk_countdown("jnp"), lanes=2, segment=8)
+        trips = []
+        eng.run(items, lambda r: trips.append(int(r.iters)))
+        assert trips == [200, 1, 1, 1]          # barrier: item 0 first
+        eng = FarmEngine(mk_countdown("jnp"), lanes=2, segment=8)
+        order = []
+        eng.run(items, lambda r: order.append(r.index), continuous=True)
+        assert order[0] == 1 and order[-1] == 0, order
+
+    def test_one_compilation_across_segments_and_refills(self):
+        """The whole continuous stream — every segment, every refill,
+        the ragged tail included — hits ONE compilation of each entry
+        point (the carry shapes round-trip unchanged)."""
+        traces = {"n": 0}
+
+        def counted(get, *_):
+            traces["n"] += 1
+            return countdown(get)
+
+        loop = LoopOfStencilReduce(
+            f=counted, k=1, combine="max", cond=lambda r: r < 0.5,
+            boundary="zero", max_iters=64, backend="pallas",
+            interpret=True, block=(32, 128))
+        eng = FarmEngine(loop, lanes=3, segment=5)
+        n = eng.run(trip_items([2, 9, 4, 17, 3, 5, 2]),
+                    lambda r: None, continuous=True)
+        assert n == 7
+        assert eng.stats["segment_traces"] == 1
+        assert eng.stats["refill_traces"] == 1
+        assert eng.stats["refills"] == 7
+        after_first = traces["n"]
+        assert after_first > 0
+        # a second stream through the same engine state must not retrace
+        eng.run(trip_items([4, 2]), lambda r: None, continuous=True)
+        assert traces["n"] == after_first, "continuous worker retraced"
+        assert eng.stats["segment_traces"] == 1
+
+    def test_ragged_tail_and_empty_source(self):
+        eng = FarmEngine(mk_countdown("jnp"), lanes=4, segment=4)
+        assert eng.run(lambda: iter([]), lambda r: None,
+                       continuous=True) == 0
+        outs = []
+        assert eng.run(trip_items([5, 2]), outs.append,
+                       continuous=True) == 2    # items < lanes
+        outs.sort(key=lambda r: r.index)
+        assert [int(o.iters) for o in outs] == [5, 2]
+
+    def test_mode_mixing_and_sharded_rejected(self):
+        eng = FarmEngine(mk_countdown("jnp"), lanes=2)
+        eng.run(trip_items([2, 3]), lambda r: None)
+        with pytest.raises(ValueError, match="round mode"):
+            eng.run(trip_items([2]), lambda r: None, continuous=True)
+        eng = FarmEngine(mk_countdown("jnp"), lanes=2, segment=3)
+        eng.run(trip_items([2]), lambda r: None, continuous=True)
+        with pytest.raises(ValueError, match="continuous mode"):
+            eng.round(np.stack(trip_items([2, 3])))
+        with pytest.raises(ValueError, match="segment"):
+            FarmEngine(mk_countdown("jnp"), lanes=2, segment=0)
+        from repro.core import GridPartition
+        mesh = jax.make_mesh((1, 1), ("lanes", "model"))
+        part = GridPartition(mesh=mesh, axis_names=("model",),
+                             array_axes=(0,))
+        loop = LoopOfStencilReduce(
+            f=countdown, cond=lambda r: r < 0.5, combine="max",
+            backend="pallas-sharded", partition=part, interpret=True,
+            block=(32, 128))
+        eng = FarmEngine(loop, lanes=1, mesh=mesh, lane_axis="lanes")
+        with pytest.raises(ValueError, match="continuous mode"):
+            eng.run(trip_items([2]), lambda r: None, continuous=True)
+
+    def test_sink_exception_does_not_corrupt_the_engine(self):
+        """A raising sink must leave the engine on LIVE buffers — the
+        donated carry is stored back on the failure path too
+        (regression: a second run crashed on deleted buffers)."""
+        eng = FarmEngine(mk_countdown("jnp"), lanes=2, segment=4)
+
+        def boom(r):
+            raise RuntimeError("sink failed")
+        with pytest.raises(RuntimeError, match="sink failed"):
+            eng.run(trip_items([2, 3, 4]), boom, continuous=True)
+        outs = []
+        assert eng.run(trip_items([2, 3, 4]), outs.append,
+                       continuous=True) == 3
+        assert sorted(r.index for r in outs) == [0, 1, 2]
+
+    def test_env_fields_survive_refill(self, rng):
+        """Per-item env fields ride the continuous refill: every item's
+        result must match its solo run with ITS OWN env — a slot that
+        kept the previous occupant's env would diverge."""
+        loop = LoopOfStencilReduce(
+            f=R.restore_taps(2.0), k=1, combine="max",
+            cond=lambda r: r < 1e-3, delta=R.abs_delta,
+            boundary="reflect", max_iters=24, backend="pallas",
+            interpret=True, block=(32, 128))
+        items = [np.asarray(x) for x in mixed_batch(rng, n=5)]
+
+        def prep(item):
+            return item, (item, (item > 1.0).astype(jnp.float32))
+
+        eng = FarmEngine(loop, lanes=2, prep=prep, segment=6)
+        outs = []
+        assert eng.run(items, outs.append, continuous=True) == 5
+        outs.sort(key=lambda r: r.index)
+        for it, res in zip(items, outs):
+            a0, envs = prep(jnp.asarray(it))
+            ref = loop.run(a0, env=envs)
+            assert int(res.iters) == int(ref.iters)
+            np.testing.assert_allclose(res.a, np.asarray(ref.a),
+                                       atol=1e-5)
+
+
+def _segment_jaxpr(backend, unroll=1):
+    """Trace one steady-state continuous segment (slots bound and the
+    carry mid-stream — the program every segment of the stream reuses)."""
+    loop = mk_countdown(backend, max_iters=32, unroll=unroll)
+    eng = FarmEngine(loop, lanes=2, segment=4)
+    eng.run(trip_items([3, 5, 4]), lambda r: None, continuous=True)
+    r, it, done = eng._cont_carry
+    return eng, jax.make_jaxpr(eng._segment_entry)(
+        eng._frames, eng._env_frames, r, it, done)
+
+
+class TestContinuousJaxpr:
+    """The zero-copy claim for the segmented loop, structurally: the
+    steady-state segment and the per-slot refill contain no pad, no
+    full-frame allocation and no super-interior copies."""
+
+    @pytest.mark.parametrize("backend,unroll",
+                             [("pallas", 1), ("pallas-multistep", 3)])
+    def test_segment_has_no_pad_or_reframe(self, backend, unroll):
+        eng, jaxpr = _segment_jaxpr(backend, unroll)
+        eqns = flatten_eqns(jaxpr.jaxpr, [])
+        names = [e.primitive.name for e in eqns]
+        assert "pad" not in names, "re-framing pad in the segment"
+        lanes, (fh, fw) = 2, eng._lspec.frame.shape
+        frame_elems = lanes * fh * fw
+        for e in eqns:
+            if e.primitive.name in ("broadcast_in_dim", "iota"):
+                for v in e.outvars:
+                    if (np.issubdtype(v.aval.dtype, np.floating)
+                            and int(np.prod(v.aval.shape)) >= frame_elems):
+                        raise AssertionError(
+                            f"full-frame allocation in segment: {e}")
+
+    @pytest.mark.parametrize("backend,unroll",
+                             [("pallas", 1), ("pallas-multistep", 3)])
+    def test_segment_while_body_is_the_persistent_kernel(self, backend,
+                                                         unroll):
+        eng, _ = _segment_jaxpr(backend, unroll)
+        r, it, done = eng._cont_carry
+        eqns = while_body_eqns(
+            lambda fr, rr, ii, dd: eng._segment_entry(fr, (), rr, ii,
+                                                      dd)[0],
+            eng._frames, r, it, done)
+        names = [e.primitive.name for e in eqns]
+        assert "pallas_call" in names
+        assert "pad" not in names
+
+    @pytest.mark.parametrize("backend,unroll",
+                             [("pallas", 1), ("pallas-multistep", 3)])
+    def test_refill_writes_at_most_one_interior(self, backend, unroll):
+        """The per-slot refill: ONE (1, m, n) interior write plus edge-
+        strip ghost refreshes — nothing frame-stack-sized materialises,
+        no pad, no re-framing."""
+        eng, _ = _segment_jaxpr(backend, unroll)
+        r, it, done = eng._cont_carry
+        item = jnp.asarray(trip_items([3])[0])
+        jaxpr = jax.make_jaxpr(eng._refill_impl)(
+            eng._frames, eng._env_frames, r, it, done,
+            jnp.asarray(0, jnp.int32), item)
+        eqns = flatten_eqns(jaxpr.jaxpr, [])
+        names = [e.primitive.name for e in eqns]
+        assert "pad" not in names, "re-framing pad in the refill"
+        spec = eng._lspec.frame
+        interior_elems = spec.m * spec.n
+        for e in eqns:
+            if e.primitive.name == "dynamic_update_slice":
+                upd = e.invars[1].aval
+                assert int(np.prod(upd.shape)) <= interior_elems, \
+                    f"super-interior DUS in refill: {upd.shape}"
+            if e.primitive.name in ("broadcast_in_dim", "iota"):
+                for v in e.outvars:
+                    if (np.issubdtype(v.aval.dtype, np.floating)
+                            and int(np.prod(v.aval.shape))
+                            >= 2 * np.prod(spec.shape)):
+                        raise AssertionError(
+                            f"frame-stack allocation in refill: {e}")
+
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "..", "src")
 
 
@@ -298,6 +580,68 @@ check(FarmEngine(mkloop("jnp"), lanes=4, mesh=mesh))
 print("OKLANES")
 """)
         assert "OKLANES" in out
+
+    def test_continuous_lanes_over_data_axis(self):
+        """Continuous refill with lanes spread over the mesh: each lane
+        shard runs its own segments (no collectives cross the lane
+        axis); parity vs the solo runs, every item exactly once."""
+        out = run_multidevice(SHARDED_PRELUDE + """
+mesh = jax.make_mesh((4,), ("data",))
+for backend in ("pallas", "jnp"):
+    eng = FarmEngine(mkloop(backend), lanes=4, mesh=mesh, segment=6)
+    outs = []
+    n = eng.run(items, outs.append, continuous=True)
+    assert n == len(items), n
+    assert sorted(r.index for r in outs) == list(range(len(items)))
+    outs.sort(key=lambda r: r.index)
+    for res, ref in zip(outs, refs):
+        assert int(res.iters) == int(ref.iters), (res.index, res.iters)
+        np.testing.assert_allclose(res.a, np.asarray(ref.a), atol=1e-5)
+    assert eng.stats["segment_traces"] == 1
+    assert eng.stats["refill_traces"] == 1
+print("OKCONT")
+""")
+        assert "OKCONT" in out
+
+    def test_composed_prep_is_halo_aware(self):
+        """The lifted composed-mode prep: a stencil-shaped prep (reads
+        neighbours across what will become shard boundaries) runs on the
+        WHOLE item before the spatial split, so its results match the
+        single-device reference exactly."""
+        out = run_multidevice(SHARDED_PRELUDE + """
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+part = GridPartition(mesh=mesh, axis_names=("model",), array_axes=(0,))
+
+def prep(item):
+    blur = (jnp.roll(item, 1, 0) + jnp.roll(item, -1, 0)
+            + jnp.roll(item, 1, 1) + jnp.roll(item, -1, 1) + item) / 5.0
+    return blur, (jnp.abs(item) > 1.0,)
+
+def restore(get, mask):
+    lap = get(-1,0)+get(1,0)+get(0,-1)+get(0,1)-4.0*get(0,0)
+    return get(0,0) + 0.1*lap
+
+def mkrestore(backend, part=None):
+    return LoopOfStencilReduce(
+        f=restore, k=1, combine="max", cond=lambda r: r < 2e-3,
+        delta=R.abs_delta, boundary="zero", max_iters=40,
+        backend=backend, partition=part, interpret=True, block=(16, 128))
+
+eng = FarmEngine(mkrestore("pallas-sharded", part), lanes=4, mesh=mesh,
+                 prep=prep)
+outs = []
+n = eng.run(items, outs.append)
+assert n == len(items), n
+jref = mkrestore("jnp")
+for it, res in zip(items, outs):
+    a0, envs = prep(jnp.asarray(it))
+    ref = jref.run(a0, env=envs)
+    assert int(res.iters) == int(ref.iters), (res.iters, ref.iters)
+    np.testing.assert_allclose(np.asarray(res.a), np.asarray(ref.a),
+                               atol=1e-5)
+print("OKPREP")
+""")
+        assert "OKPREP" in out
 
     def test_composed_lanes_times_spatial(self):
         """Lanes over 'data' x each lane's frame ppermute-decomposed

@@ -1,5 +1,6 @@
 """Serving engine: the decode loop (-s variant) — greedy consistency,
-EOS handling, per-sequence trip counts."""
+EOS handling, per-sequence trip counts — and continuous batching
+(per-sequence KV-slot refill, mid-batch emission)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +8,8 @@ import pytest
 
 from repro.configs import get_reduced
 from repro.models import transformer as T
-from repro.serve import GenerateConfig, generate
+from repro.serve import ContinuousEngine, GenerateConfig, generate
+from repro.serve.batcher import Batcher, Request
 
 
 @pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-130m",
@@ -42,6 +44,126 @@ def test_eos_stops_all_lanes_early(rng):
     assert int(lengths[0]) == 1
     # post-EOS positions are padded with eos
     assert (np.asarray(out2[0, 1:]) == eos).all()
+
+
+class TestContinuousBatching:
+    """Per-sequence slot refill: short sequences are emitted before long
+    ones finish, KV slots are reused mid-batch, and the whole stream
+    compiles ONCE per entry point."""
+
+    @pytest.fixture(scope="class")
+    def served(self):
+        cfg = get_reduced("qwen3-1.7b")
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        return cfg, params
+
+    def test_mid_batch_emission_and_slot_reuse(self, served, rng):
+        cfg, params = served
+        gcfg = GenerateConfig(max_new_tokens=12, eos_id=1,
+                              temperature=0.0)
+        b = Batcher(cfg, params, gcfg, max_batch=2,
+                    cache_dtype=jnp.float32)
+        budgets = [2, 12, 3, 12, 4]            # wildly different
+        prompts = [np.asarray(rng.integers(2, cfg.vocab_size, 6),
+                              np.int32) for _ in budgets]
+        for i, (p, bud) in enumerate(zip(prompts, budgets)):
+            b.submit(Request(rid=i, prompt=p, max_new_tokens=bud))
+        results = b.run_continuous()
+        assert sorted(r.rid for r in results) == list(range(5))
+
+        # every result equals its solo greedy generate — the reused KV
+        # slot carries nothing over from the previous occupant
+        for r in results:
+            g = GenerateConfig(max_new_tokens=budgets[r.rid], eos_id=1,
+                               temperature=0.0)
+            solo, lengths, _ = generate(
+                cfg, params, jnp.asarray(prompts[r.rid][None]), g,
+                cache_dtype=jnp.float32)
+            np.testing.assert_array_equal(
+                r.tokens, np.asarray(solo[0, :int(lengths[0])]))
+
+        # short sequences are emitted BEFORE long ones finish: rid 0
+        # (budget 2) shares the initial cohort with rid 1 (budget 12)
+        # and must beat it out; rid 2 takes rid 0's slot mid-batch and
+        # still beats rid 1
+        pos = {r.rid: k for k, r in enumerate(results)}
+        assert pos[0] < pos[1]
+        assert pos[2] < pos[1]
+
+        # KV slots reused: 5 requests through 2 slots, ONE compilation
+        # of each entry point across all segments and slot prefills
+        eng = b.engines[0]
+        assert eng.stats["prefills"] == 5
+        assert eng.stats["segment_traces"] == 1
+        assert eng.stats["prefill_traces"] == 1
+
+    def test_ring_cache_layers_decode_per_sequence(self, rng):
+        """Sliding-window (ring-buffer KV) layers under continuous
+        batching: each slot writes its OWN ring position (the vmapped
+        ragged path of attention._ring_write) — parity vs solo generate
+        on gemma2 (window=8, rings wrap within the budget)."""
+        cfg = get_reduced("gemma2-9b")
+        assert cfg.sliding_window, "arch must carry ring layers"
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        gcfg = GenerateConfig(max_new_tokens=7, eos_id=1,
+                              temperature=0.0)
+        budgets = [2, 7, 3]
+        prompts = [np.asarray(rng.integers(2, cfg.vocab_size, 5),
+                              np.int32) for _ in budgets]
+        b = Batcher(cfg, params, gcfg, max_batch=2,
+                    cache_dtype=jnp.float32)
+        for i, (p, bud) in enumerate(zip(prompts, budgets)):
+            b.submit(Request(rid=i, prompt=p, max_new_tokens=bud))
+        results = b.run_continuous()
+        assert sorted(r.rid for r in results) == [0, 1, 2]
+        for r in results:
+            g = GenerateConfig(max_new_tokens=budgets[r.rid], eos_id=1,
+                               temperature=0.0)
+            solo, lengths, _ = generate(
+                cfg, params, jnp.asarray(prompts[r.rid][None]), g,
+                cache_dtype=jnp.float32)
+            np.testing.assert_array_equal(
+                r.tokens, np.asarray(solo[0, :int(lengths[0])]))
+
+    def test_sink_exception_does_not_corrupt_the_engine(self, served,
+                                                        rng):
+        """A raising emit callback must leave the engine on LIVE buffers
+        (regression: donated inputs were only stored back on success)."""
+        cfg, params = served
+        gcfg = GenerateConfig(max_new_tokens=3, eos_id=1)
+        eng = ContinuousEngine(cfg, params, gcfg, slots=2,
+                               cache_dtype=jnp.float32)
+        prompt = np.asarray(rng.integers(2, cfg.vocab_size, 4), np.int32)
+        reqs = [Request(rid=i, prompt=prompt) for i in range(2)]
+
+        def boom(rid, toks):
+            raise RuntimeError("sink failed")
+        with pytest.raises(RuntimeError, match="sink failed"):
+            eng.run(reqs, boom)
+        got = []
+        assert eng.run(reqs, lambda rid, toks: got.append(rid)) == 2
+        assert sorted(got) == [0, 1]
+
+    def test_unsupported_models_and_overbudget_rejected(self, served,
+                                                        rng):
+        cfg, params = served
+        gcfg = GenerateConfig(max_new_tokens=4, eos_id=1)
+        whisper = get_reduced("whisper-base")
+        with pytest.raises(ValueError, match="per-sequence positions"):
+            ContinuousEngine(whisper, None, gcfg)
+        eng = ContinuousEngine(cfg, params, gcfg, slots=2,
+                               cache_dtype=jnp.float32)
+        prompt = np.asarray(rng.integers(2, cfg.vocab_size, 4), np.int32)
+        with pytest.raises(ValueError, match="budget"):
+            eng.run([Request(rid=0, prompt=prompt, max_new_tokens=9)],
+                    lambda rid, toks: None)
+        with pytest.raises(ValueError, match="budget"):
+            eng.run([Request(rid=0, prompt=prompt, max_new_tokens=0)],
+                    lambda rid, toks: None)
+        with pytest.raises(ValueError, match="prompt"):
+            eng.run([Request(rid=0, prompt=prompt),
+                     Request(rid=1, prompt=prompt[:2])],
+                    lambda rid, toks: None)
 
 
 def test_temperature_sampling_is_reproducible(rng):
