@@ -1,0 +1,110 @@
+"""Serving tier — ragged-prompt continuous batching vs exact grouping.
+
+A ragged queue (mixed prompt lengths AND token budgets) drains through
+the continuous engine two ways:
+
+    single_pool   ONE ``ContinuousEngine`` binding at the queue's max
+                  prompt length (padded per-slot prefill with a
+                  prompt-length mask) — the PR-5 default of
+                  ``Batcher.run_continuous``
+    exact_groups  the old one-engine-per-exact-prompt-length scheme,
+                  which idles a whole cohort at every group tail (and
+                  compiles once per distinct length)
+
+One engine (set) per mode serves every timing sample — the slots and
+the single compilation behind them are reused across runs, exactly as a
+long-running server would; the idle counters accumulate, so the
+per-stream average is reported.  Reported per mode: median wall time,
+tok/s, and ``idle_slot_steps`` (slot-steps burned on retired or
+done-masked slots — the serve twin of the farm tier's
+``wasted_lane_steps``).  The idle ratio is hardware-independent and
+carries the single-pool claim on CPU CI, where wall time is dominated
+by the tiny reduced model; no-pad-leak and parity are pinned in
+tests/train/test_serve.py and the hypothesis suite.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import record
+
+
+def run(arch: str = "qwen3-1.7b", n_requests: int = 10, slots: int = 2,
+        max_new: int = 8, iters: int = 3) -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.models import transformer as T
+    from repro.serve import GenerateConfig
+    from repro.serve.batcher import Request
+    from repro.serve.engine import ContinuousEngine
+
+    cfg = get_reduced(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    gcfg = GenerateConfig(max_new_tokens=max_new, eos_id=1,
+                          temperature=0.0)
+    rng = np.random.default_rng(0)
+    lens = [4 + 3 * (i % 3) for i in range(n_requests)]      # 4/7/10
+    budgets = [max_new if i % 4 == 3 else 2 for i in range(n_requests)]
+    requests = [Request(rid=i, max_new_tokens=budgets[i],
+                        prompt=np.asarray(
+                            rng.integers(2, cfg.vocab_size, lens[i]),
+                            np.int32))
+                for i in range(n_requests)]
+
+    def mk_engine(max_prompt_len):
+        return ContinuousEngine(cfg, params, gcfg, slots=slots,
+                                cache_dtype=jnp.float32,
+                                max_prompt_len=max_prompt_len)
+
+    # single pool: one engine, the whole ragged queue
+    pool = mk_engine(max(lens))
+    # exact groups: one engine per distinct prompt length (built once —
+    # a real deployment would cache them, but each still compiles its
+    # own prefill/segment pair)
+    groups = {}
+    for r in requests:
+        groups.setdefault(len(r.prompt), []).append(r)
+    group_engines = {L: mk_engine(L) for L in groups}
+
+    def single_pool():
+        toks = []
+        pool.run(requests, lambda rid, t: toks.append(len(t)))
+        return sum(toks)
+
+    def exact_groups():
+        toks = []
+        for L, group in groups.items():
+            group_engines[L].run(group,
+                                 lambda rid, t: toks.append(len(t)))
+        return sum(toks)
+
+    modes = {"single_pool": (single_pool, [pool]),
+             "exact_groups": (exact_groups,
+                              list(group_engines.values()))}
+    rows = []
+    for name, (fn, engines) in modes.items():
+        ntok = fn()                               # warmup/compile
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        runs = iters + 1
+        t = float(np.median(ts))
+        idle = sum(e.stats["idle_slot_steps"] for e in engines) // runs
+        total = sum(e.stats["slot_steps"] for e in engines) // runs
+        rows.append(record(
+            f"serve_ragged_{name}", t, backend="continuous",
+            derived=(f"tok_per_s={ntok / t:.1f};"
+                     f"idle_slot_steps={idle};slot_steps={total};"
+                     f"engines={len(engines)}")))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import csv_row
+    print("\n".join(csv_row(r) for r in run()))

@@ -21,7 +21,11 @@ worst at) through ``FarmEngine`` in round mode vs
 ``wasted_lane_steps`` counter (done-masked lane sweeps burned behind
 stragglers) — the waste ratio is hardware-independent, so it carries the
 continuous-refill claim even on CPU-interpret CI where wall time is
-dominated by the emulated kernel.
+dominated by the emulated kernel.  The same round-vs-continuous
+comparison also runs on the COMPOSED deployment (lanes over ``data`` ×
+per-lane frames ppermute-decomposed over ``model``,
+``pallas-sharded``) in an 8-virtual-device subprocess
+(:func:`run_composed_continuous`).
 
 Reported per deployment: median wall time, items/sec, and (for the lane
 engine) host-transfer bytes per item from the engine's own accounting —
@@ -139,6 +143,97 @@ def run_continuous(sizes=(64,), stream_n=16, lanes=4,
     return rows
 
 
+_COMPOSED_WORKER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, time, json
+sys.path.insert(0, %r)
+import jax, numpy as np
+from repro.core import FarmEngine, GridPartition, LoopOfStencilReduce
+
+SIZE, STREAM_N, LANES, ITERS = %d, %d, %d, %d
+
+def countdown(get, *_):
+    return get(0, 0) - 1.0
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+part = GridPartition(mesh=mesh, axis_names=("model",), array_axes=(0,))
+
+def mk():
+    return LoopOfStencilReduce(
+        f=countdown, k=1, combine="max", cond=lambda r: r < 0.5,
+        boundary="zero", max_iters=64, backend="pallas-sharded",
+        partition=part, interpret=True, block=(16, 128))
+
+base = np.linspace(0.1, 0.9, SIZE * SIZE,
+                   dtype=np.float32).reshape(SIZE, SIZE)
+trips = [40 if i %% 4 == 3 else 2 for i in range(STREAM_N)]
+items = [base + float(t) - 1.0 for t in trips]
+
+eng_round = FarmEngine(mk(), lanes=LANES, mesh=mesh)
+eng_cont = FarmEngine(mk(), lanes=LANES, mesh=mesh, segment=8)
+
+def time_mode(fn, eng):
+    fn()                                      # warmup/compile
+    ts = []
+    for _ in range(ITERS):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    runs = ITERS + 1
+    return (float(np.median(ts)), eng.wasted_lane_steps // runs,
+            eng.lane_steps // runs)
+
+t_r, w_r, s_r = time_mode(
+    lambda: eng_round.run(items, lambda r: None), eng_round)
+t_c, w_c, s_c = time_mode(
+    lambda: eng_cont.run(items, lambda r: None, continuous=True),
+    eng_cont)
+print(json.dumps({"round": [t_r, w_r, s_r],
+                  "continuous": [t_c, w_c, s_c]}))
+"""
+
+
+def run_composed_continuous(size=64, stream_n=12, lanes=4,
+                            iters=3) -> list[dict]:
+    """Round barrier vs continuous refill on the COMPOSED (lanes over
+    'data' × per-lane frames ppermute-decomposed over 'model')
+    deployment — an 8-virtual-device subprocess, bimodal trip counts.
+    The waste ratio carries the claim (CPU interpret wall time is
+    emulation-bound); parity and jaxpr structure are pinned in
+    tests/core/test_farm.py::TestComposedContinuous."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = _COMPOSED_WORKER % (src, size, stream_n, lanes, iters)
+    try:
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, timeout=900)
+        if out.returncode != 0:
+            raise RuntimeError(out.stderr[-1500:])
+        res = json.loads(out.stdout.strip().splitlines()[-1])
+    except Exception as e:
+        return [record(f"stream_{size}_composed", -1.0, mesh="2x4",
+                       derived=f"ERROR:{type(e).__name__}")]
+    rows = []
+    (t_r, w_r, s_r), (t_c, w_c, s_c) = res["round"], res["continuous"]
+    rows.append(record(
+        f"stream_{size}_composed_round_bimodal", t_r,
+        backend="pallas-sharded", mesh="2x4",
+        derived=(f"items_per_s={stream_n / t_r:.1f};"
+                 f"wasted_lane_steps={w_r};lane_steps={s_r}")))
+    rows.append(record(
+        f"stream_{size}_composed_continuous_bimodal", t_c,
+        backend="pallas-sharded", mesh="2x4",
+        derived=(f"items_per_s={stream_n / t_c:.1f};"
+                 f"wasted_lane_steps={w_c};lane_steps={s_c};"
+                 f"waste_cut={w_r / max(w_c, 1):.1f}x")))
+    return rows
+
+
 def run(sizes=(64,), stream_n=24, lanes=4, iters=9) -> list[dict]:
     rows = []
     rng = np.random.default_rng(0)
@@ -205,6 +300,8 @@ def run(sizes=(64,), stream_n=24, lanes=4, iters=9) -> list[dict]:
                          f"speedup_vs_batch_farm={t_old / t_new:.2f}x")))
     rows += run_continuous(sizes=sizes, stream_n=max(stream_n // 2, 8),
                            lanes=lanes, iters=max(iters // 2, 3))
+    rows += run_composed_continuous(size=min(sizes), lanes=lanes,
+                                    iters=max(iters // 3, 2))
     return rows
 
 

@@ -14,7 +14,12 @@ current baseline.
                                 per-iteration time + ppermute rounds)
     1:1 streaming (§4.2/4.3) -> bench_streaming (lane-slot reuse vs the
                                 per-batch sharded_farm path; items/sec +
-                                host-transfer bytes/item)
+                                host-transfer bytes/item; round vs
+                                continuous incl. the composed
+                                lanes × spatial deployment)
+    serve (DESIGN.md §Serve) -> bench_serve (ragged-queue continuous
+                                batching: single pool vs exact-length
+                                groups; tok/s + idle_slot_steps)
     §Roofline (TPU target)   -> bench_roofline (reads runs/dryrun)
 
 ``--quick`` shrinks sizes for CI-speed runs; ``--out-dir`` relocates the
@@ -32,13 +37,14 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: helmholtz,sobel,restoration,"
-                         "sharded,streaming,roofline")
+                         "sharded,streaming,serve,roofline")
     ap.add_argument("--out-dir", default=".",
                     help="where BENCH_summary.json is written")
     args = ap.parse_args()
 
     from . import (bench_helmholtz, bench_restoration, bench_roofline,
-                   bench_sharded, bench_sobel, bench_streaming)
+                   bench_serve, bench_sharded, bench_sobel,
+                   bench_streaming)
     from .common import csv_row, record, write_summary
 
     suites = {
@@ -56,6 +62,9 @@ def main() -> None:
             sizes=(64,) if args.quick else (64, 128),
             stream_n=16 if args.quick else 32,
             iters=9),
+        "serve": lambda: bench_serve.run(
+            n_requests=8 if args.quick else 12,
+            iters=2 if args.quick else 3),
         "roofline": bench_roofline.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)

@@ -4,10 +4,11 @@ EOS reduce).  Loads a checkpoint from examples/train_lm.py when present.
 
     PYTHONPATH=src python examples/serve_lm.py --arch qwen3-1.7b --reduced
 
-``--continuous`` serves the same prompts through continuous batching
+``--continuous`` serves RAGGED prompts through continuous batching
 instead (per-sequence KV-slot refill, mid-batch emission): requests with
-wildly different token budgets stream through ``--batch`` persistent
-slots and are printed in COMPLETION order.
+wildly different prompt lengths AND token budgets stream through ONE
+engine binding of ``--batch`` persistent slots (padded per-slot prefill
+with a prompt-length mask) and are printed in COMPLETION order.
 """
 import argparse
 import sys
@@ -54,23 +55,29 @@ def main():
                     cache_dtype=jnp.float32)
         budgets = [max(1, (i * 7) % args.max_new + 1)
                    for i in range(args.requests)]
+        # ragged prompts: one slot pool serves every length
+        plens = [max(2, (args.prompt_len - 3 * i) % args.prompt_len + 1)
+                 for i in range(args.requests)]
         for i, bud in enumerate(budgets):
             b.submit(Request(
                 rid=i, max_new_tokens=bud,
                 prompt=np.asarray(rng.integers(
-                    2, cfg.vocab_size, args.prompt_len), np.int32)))
+                    2, cfg.vocab_size, plens[i]), np.int32)))
         t0 = time.perf_counter()
         results = b.run_continuous()
         dt = time.perf_counter() - t0
         eng = b.engines[0]
         total = sum(len(r.tokens) for r in results)
         print(f"[serve_lm] {args.arch} (reduced, continuous): "
-              f"{len(results)} requests through {args.batch} KV slots "
-              f"in {dt:.2f}s ({total / dt:.1f} tok/s, "
+              f"{len(results)} ragged requests through {args.batch} KV "
+              f"slots (ONE engine binding) in {dt:.2f}s "
+              f"({total / dt:.1f} tok/s, "
               f"{eng.stats['segments']} segments, "
-              f"{eng.stats['prefills']} slot prefills)")
+              f"{eng.stats['prefills']} slot prefills, "
+              f"{eng.stats['idle_slot_steps']} idle slot-steps)")
         for r in results:           # completion order
-            print(f"  rid{r.rid} budget={budgets[r.rid]} "
+            print(f"  rid{r.rid} prompt={plens[r.rid]} "
+                  f"budget={budgets[r.rid]} "
                   f"len={len(r.tokens)}: {r.tokens[:8].tolist()}...")
         return
 

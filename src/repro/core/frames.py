@@ -527,6 +527,58 @@ def refill_lane_env_sharded(env_frames: jnp.ndarray, e: jnp.ndarray,
         lambda f: refresh_frame_sharded(f, sspec, ghost))(env_frames)
 
 
+def refill_slot_frame_sharded(frames: jnp.ndarray, interior: jnp.ndarray,
+                              li, owns, sspec: ShardedFrameSpec,
+                              boundary: Boundary | str) -> jnp.ndarray:
+    """Owner-masked refill of ONE lane slot of a SHARDED frame stack
+    (runs inside ``shard_map`` — the continuous-refill twin of
+    :func:`refill_lane_frames_sharded`).
+
+    ``interior`` is this shard's LOCAL (lm, ln) block of the next item;
+    ``li`` is the slot's local lane index (pre-clipped into range) and
+    ``owns`` masks the write — every lane shard executes the same
+    O(interior) read/select/write so the program stays SPMD-uniform, but
+    only the owner's slot actually changes (non-owners write their
+    current values back).  The ghost rings then re-assert through the
+    SAME lane-batched edge-strip ppermute the loop body uses — O(pad·n)
+    strips along the spatial axes only; nothing crosses the lane axis.
+    No pad, no full-frame copy, one compilation per stream.
+    """
+    spec = sspec.local
+    p = spec.pad
+    cur = jax.lax.dynamic_slice(frames, (li, p, p), (1, spec.m, spec.n))
+    new = jnp.where(owns, interior[None].astype(frames.dtype), cur)
+    frames = jax.lax.dynamic_update_slice(frames, new, (li, p, p))
+    return jax.vmap(
+        lambda f: refresh_frame_sharded(f, sspec, boundary))(frames)
+
+
+def refill_slot_env_sharded(env_frames: jnp.ndarray, e: jnp.ndarray,
+                            li, owns, sspec: ShardedFrameSpec,
+                            boundary: Boundary | str,
+                            halo: bool = False) -> jnp.ndarray:
+    """Owner-masked single-slot env refill inside ``shard_map`` (the
+    continuous twin of :func:`refill_lane_env_sharded`): the owner lane
+    shard's slot takes this shard's LOCAL env block; with ``halo`` the
+    ghost strips re-assert via the ppermute exchange as
+    :func:`frame_env_sharded`."""
+    spec = sspec.local
+    if not halo:
+        cur = jax.lax.dynamic_slice(env_frames, (li, 0, 0),
+                                    (1, spec.m, spec.n))
+        new = jnp.where(owns, e[None].astype(env_frames.dtype), cur)
+        return jax.lax.dynamic_update_slice(env_frames, new, (li, 0, 0))
+    b = Boundary(boundary)
+    ghost = b if b is Boundary.WRAP else Boundary.ZERO
+    p = spec.pad
+    cur = jax.lax.dynamic_slice(env_frames, (li, p, p),
+                                (1, spec.m, spec.n))
+    new = jnp.where(owns, e[None].astype(env_frames.dtype), cur)
+    env_frames = jax.lax.dynamic_update_slice(env_frames, new, (li, p, p))
+    return jax.vmap(
+        lambda f: refresh_frame_sharded(f, sspec, ghost))(env_frames)
+
+
 def shard_domain_bounds(sspec: ShardedFrameSpec) -> jnp.ndarray:
     """(1, 4) int32 ``[row_lo, row_hi, col_lo, col_hi]`` of the GLOBAL
     domain in this shard's frame coordinates.

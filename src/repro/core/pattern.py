@@ -51,7 +51,7 @@ from .semantics import Boundary
 from .stencil import stencil_taps, stencil_windows, stencil_indexed
 
 
-def segmented_while(body, carry, *, finished, segment):
+def segmented_while(body, carry, *, finished, segment, early_exit=True):
     """Bounded early-exit slice of a done-masked lane loop.
 
     The continuous-refill primitive shared by the farm tier
@@ -72,7 +72,20 @@ def segmented_while(body, carry, *, finished, segment):
     retired lanes (queue drained) keeps advancing the live ones.
     Returns ``(carry', steps)``; the carry shapes round-trip unchanged,
     so ONE compilation serves every segment.
+
+    ``early_exit=False`` runs EXACTLY ``segment`` done-masked body steps
+    instead (a ``fori_loop`` — no data-dependent trip count).  This is
+    the uniform-schedule variant for deployments whose body carries
+    collectives that must stay step-aligned across independently paced
+    shard groups: the composed lanes × spatial farm exchanges ghost
+    strips by ppermute inside the body, so a data-dependent early exit
+    on one lane shard would desynchronise the other shards' exchange
+    rendezvous (the convergence masks still freeze each lane at its own
+    trip count — only the *schedule* is fixed).
     """
+    if not early_exit:
+        carry = jax.lax.fori_loop(0, segment, lambda _, c: body(c), carry)
+        return carry, jnp.asarray(segment, jnp.int32)
     fin0 = finished(carry)
 
     def seg_body(c):
@@ -456,8 +469,8 @@ class LoopOfStencilReduce:
         _, _, it, done = carry
         return jnp.logical_or(done, it >= self.max_iters)
 
-    def _drive_lanes(self, a0, *, step, finalize, done0=None
-                     ) -> LoopResult:
+    def _drive_lanes(self, a0, *, step, finalize, done0=None,
+                     cond_fold=None) -> LoopResult:
         """Lane-stacked repeat/until: ``step(carry) -> (carry', r)`` with
         ``r`` of shape (lanes,); each lane owns a done flag and an
         iteration counter, and a lane whose flag (or iteration cap) has
@@ -465,6 +478,13 @@ class LoopOfStencilReduce:
         while_loop exits when no live lane remains.  Semantically
         identical to ``vmap``-ing :meth:`_drive` lane by lane, but shaped
         so a streaming executor can hold the stacked carry across items.
+
+        ``cond_fold`` optionally folds the scalar any-live predicate
+        across shard groups (inside ``shard_map``): the composed farm
+        passes a lane-axis ``pmax`` so every shard runs the SAME trip
+        count — its body carries spatial ppermutes whose rendezvous must
+        stay step-aligned mesh-wide (done-masking keeps per-lane results
+        unchanged; the extra sweeps are the barrier's waste).
         """
         r_aval = jax.eval_shape(lambda a: step(a)[1], a0)
         lanes = r_aval.shape[0]
@@ -476,13 +496,15 @@ class LoopOfStencilReduce:
 
         def cond_fun(carry):
             _, _, it, done = carry
-            return jnp.any(jnp.logical_and(~done, it < self.max_iters))
+            live = jnp.any(jnp.logical_and(~done, it < self.max_iters))
+            return live if cond_fold is None else cond_fold(live)
 
         a, r, it, _ = jax.lax.while_loop(cond_fun, body,
                                          (a0, r0, it0, d0))
         return LoopResult(a=finalize(a), reduced=r, iters=it, state=None)
 
-    def lane_segment(self, carry, *, step, segment: int):
+    def lane_segment(self, carry, *, step, segment: int,
+                     early_exit: bool = True):
         """One bounded slice of the lane loop — the continuous-refill tier.
 
         Runs the same done-masked body as :meth:`_drive_lanes` but hands
@@ -494,12 +516,15 @@ class LoopOfStencilReduce:
         the finished lanes' slots in place — one compilation serves every
         segment of the stream.  Returns ``(carry', steps)`` with
         ``steps`` the number of body steps executed (each ``unroll``
-        sweeps deep).
+        sweeps deep).  ``early_exit=False`` runs exactly ``segment``
+        done-masked steps (see :func:`segmented_while` — the
+        uniform-schedule variant for collective-carrying bodies).
         """
         lanes = carry[3].shape[0]
         return segmented_while(
             self._lane_body(step, lanes), carry,
-            finished=self._lane_finished, segment=segment)
+            finished=self._lane_finished, segment=segment,
+            early_exit=early_exit)
 
     # -- shared while_loop scaffold (all backends) -----------------------
     def _drive(self, a0, state0, *, step, state_view, finalize

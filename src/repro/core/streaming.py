@@ -35,7 +35,14 @@ JAX realisation, two tiers of its own:
   items mid-flight (the FastFlow farm's worker refill), and results
   emit in completion order — throughput independent of the per-item
   trip-count spread.  ``stats["wasted_lane_steps"]`` counts the
-  done-masked sweeps the barrier would have burned.
+  done-masked sweeps the barrier would have burned.  Continuous mode
+  covers EVERY deployment the round path does, including the composed
+  lanes × spatial ``pallas-sharded`` farm: there the refill scatters
+  each finished lane's LOCAL interior blocks inside ``shard_map`` with
+  owner masking (:func:`repro.core.frames.refill_slot_frame_sharded`)
+  and the ghost rings re-assert through the same O(k·n) edge-strip
+  ppermute the loop body uses — per-shard segments, no cross-lane
+  collectives.
 
 ``ofarm`` ordering comes for free in the round modes: lanes are
 positional and batched execution is deterministic.  Continuous mode
@@ -174,6 +181,41 @@ class StreamRunner:
 # ---------------------------------------------------------------------------
 
 
+def _default_prep(item):
+    """Identity prep.  A bare array IS the loop input; a TUPLE stream
+    item carries its own read-only env fields along — ``(a, *env)`` —
+    for streams whose env is produced upstream (an external detector)
+    rather than derived from the item on device."""
+    if isinstance(item, tuple):
+        return item[0], tuple(item[1:])
+    return item, ()
+
+
+def _as_item(item):
+    """Normalise one stream item to ndarray leaves (tuple items keep
+    their env leaves alongside the main array)."""
+    if isinstance(item, (tuple, list)):
+        return tuple(np.asarray(leaf) for leaf in item)
+    return np.asarray(item)
+
+
+def _item_leaves(item) -> tuple:
+    return item if isinstance(item, tuple) else (item,)
+
+
+def _item_nbytes(item) -> int:
+    return sum(leaf.nbytes for leaf in _item_leaves(item))
+
+
+def _stack_items(batch: list):
+    """Stack a list of (normalised) stream items leaf-wise."""
+    batch = [_as_item(it) for it in batch]
+    if isinstance(batch[0], tuple):
+        return tuple(np.stack([it[j] for it in batch])
+                     for j in range(len(batch[0])))
+    return np.stack(batch)
+
+
 @dataclasses.dataclass
 class StreamResult:
     """One continuous-mode emission: the item's stream position plus the
@@ -222,7 +264,11 @@ class FarmEngine:
     feeding restoration).  ``prep`` runs on the WHOLE item before any
     spatial decomposition, so stencil-shaped preps (halo-dependent, like
     AMF detection) see their full neighbourhood even under the composed
-    sharded deployment.
+    sharded deployment.  Stream items may also be TUPLES
+    ``(a, *env_items)`` carrying externally produced env fields; the
+    default prep splits them, a user ``prep`` receives the whole tuple.
+    Every leaf — main and env alike — is shape/dtype-guarded against
+    mid-stream drift (build a fresh engine per item geometry).
 
     Deployments:
 
@@ -236,8 +282,11 @@ class FarmEngine:
       lanes over ``lane_axis`` × each lane's frame spatially decomposed
       over ``loop.partition``'s axes (all on the same ``mesh``), with the
       lane-batched ppermute ghost exchange inside the shared while body.
-      Round-based only (a spatially decomposed frame has no single-slot
-      global interior to refill).
+      Both modes run here too: continuous refill scatters a finished
+      lane's LOCAL interior blocks per shard (owner-masked, inside
+      ``shard_map``) and re-asserts the ghosts through the same
+      edge-strip ppermute — the segmented while runs per lane shard with
+      no cross-lane collectives.
 
     Use :meth:`run` for the full source→sink stream protocol, or
     :meth:`round` to push one stacked batch through the slots.
@@ -287,7 +336,7 @@ class FarmEngine:
                         f"axes {self.mesh.axis_names}")
         if self.segment < 1:
             raise ValueError(f"segment must be >= 1; got {self.segment}")
-        self._prep1 = self.prep or (lambda item: (item, ()))
+        self._prep1 = self.prep or _default_prep
         self._vprep = jax.vmap(self._prep1)
         self._bound = False
         self._mode = None               # "round" | "continuous" once used
@@ -312,10 +361,15 @@ class FarmEngine:
                       "segment_traces": 0, "refill_traces": 0}
 
     # -- static geometry (first item binds the shapes) -------------------
-    def _bind(self, item: np.ndarray):
+    def _bind(self, item):
         L = self.lanes
-        item = np.asarray(item)
-        items_aval = jax.ShapeDtypeStruct((L, *item.shape), item.dtype)
+        item = _as_item(item)
+        self._item_avals = tuple(
+            jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
+            for leaf in _item_leaves(item))
+        items_aval = jax.tree.map(
+            lambda leaf: jax.ShapeDtypeStruct((L, *leaf.shape),
+                                              leaf.dtype), item)
         a_aval, env_avals = jax.eval_shape(self._vprep, items_aval)
         if len(a_aval.shape) != 3:
             raise ValueError(
@@ -324,7 +378,6 @@ class FarmEngine:
         m, n = a_aval.shape[1:]
         self._loop = self.loop._resolve_unroll((m, n))
         loop = self._loop
-        self._item_aval = items_aval
         self._prep_avals = (a_aval, env_avals)
         self._nshards = (1 if self.mesh is None
                          else self.mesh.shape[self.lane_axis])
@@ -441,6 +494,32 @@ class FarmEngine:
         lanes = iters.shape[0]
         return (lanes * jnp.max(iters) - jnp.sum(iters))[None]
 
+    def _round_waste_composed(self, iters):
+        """Composed-mode round waste: the barrier is MESH-global (see
+        :meth:`_lane_cond_fold`), so every lane idles behind the
+        slowest lane of ANY lane shard — fold the per-shard max over the
+        lane axis before differencing."""
+        lanes = iters.shape[0]
+        gmax = jax.lax.pmax(jnp.max(iters), self.lane_axis)
+        return (lanes * gmax - jnp.sum(iters))[None]
+
+    def _lane_cond_fold(self):
+        """Composed backend only: fold the round's any-live predicate
+        over the lane axis (ONE scalar pmax per body step) so every lane
+        shard runs the same trip count.  The loop body exchanges ghost
+        strips by ppermute along the spatial axes; lane shards pacing
+        their whiles independently would desynchronise those exchange
+        rendezvous (a latent deadlock on runtimes with global collective
+        rendezvous).  Single-device-backend lane farms carry no body
+        collectives and keep their per-shard trip counts."""
+        if self._loop.backend != "pallas-sharded":
+            return None
+        axis = self.lane_axis
+
+        def fold(live_any):
+            return jax.lax.pmax(live_any.astype(jnp.int32), axis) > 0
+        return fold
+
     def _local_round(self, frames, env_frames, interiors, envs, active):
         """The device-side round (directly, or per-shard inside
         shard_map): in-place slot refill → ONE done-masked lane
@@ -455,24 +534,44 @@ class FarmEngine:
         eng, lspec = self._eng, self._lspec
         frames, env_frames = eng.refill_lanes(frames, env_frames,
                                               interiors, envs, lspec)
+        fold = self._lane_cond_fold()
         res = loop._drive_lanes(
             frames,
             step=lambda fr: eng.sweeps_lanes(fr, env_frames, lspec),
-            finalize=lambda fr: fr, done0=done0)
+            finalize=lambda fr: fr, done0=done0, cond_fold=fold)
         outs = eng.unframe_lanes(res.a, lspec)
-        return (res.a, env_frames, outs, res.reduced, res.iters,
-                self._round_waste(res.iters))
+        waste = (self._round_waste(res.iters) if fold is None
+                 else self._round_waste_composed(res.iters))
+        return (res.a, env_frames, outs, res.reduced, res.iters, waste)
 
     def round(self, items, count: Optional[int] = None):
         """Push one stacked (≤ lanes, ...) batch through the slots.
 
+        ``items`` is a stacked array, a LIST of stream items, or — for
+        tuple stream items ``(a, *env)`` — a TUPLE of per-leaf stacks
+        (stack each leaf across the batch; a tuple argument is always
+        read this way, so pass a list, not a tuple, of items).
         Returns per-item ``(a, reduced, iters)`` stacks of length
         ``count`` (short batches are padded to the lane count on the
         host and masked out on device — the shapes, and therefore the
         compilation, never change).
         """
-        items = np.asarray(items)
-        count = items.shape[0] if count is None else count
+        if isinstance(items, list):
+            items = _stack_items(items)
+        elif isinstance(items, tuple):
+            items = tuple(np.asarray(leaf) for leaf in items)
+        else:
+            items = np.asarray(items)
+        leaves = _item_leaves(items)
+        B = leaves[0].shape[0]
+        if any(leaf.shape[0] != B for leaf in leaves):
+            raise ValueError(
+                f"per-leaf stacks of a tuple batch must share the "
+                f"leading batch dim; got "
+                f"{tuple(leaf.shape[0] for leaf in leaves)} (a tuple "
+                "argument is read as (main, *env) per-leaf stacks — "
+                "pass a list of items to stack leaf-wise)")
+        count = B if count is None else count
         if count > self.lanes:
             raise ValueError(f"batch of {count} items exceeds "
                              f"lanes={self.lanes}")
@@ -480,23 +579,21 @@ class FarmEngine:
             raise ValueError("engine already streamed in continuous mode;"
                              " build a fresh FarmEngine for rounds")
         self._mode = "round"
+        rep = jax.tree.map(lambda leaf: leaf[0], items)
         if not self._bound:
-            self._bind(items[0])
-        elif (items.shape[1:] != self._item_aval.shape[1:]
-              or items.dtype != self._item_aval.dtype):
-            raise ValueError(
-                f"stream item shape changed mid-stream: slots are bound "
-                f"to {self._item_aval.shape[1:]}/{self._item_aval.dtype},"
-                f" got {items.shape[1:]}/{items.dtype} (build a fresh "
-                "FarmEngine per item geometry)")
+            self._bind(rep)
+        else:
+            self._check_item(_as_item(rep))
         # payload accounting, symmetric with _drain's d2h: the zero
         # lanes padding a ragged round are implementation overhead, not
         # per-item traffic
-        self.stats["h2d_bytes"] += (items.nbytes // items.shape[0]) * count
-        if items.shape[0] < self.lanes:
-            pad = np.zeros((self.lanes - items.shape[0],
-                            *items.shape[1:]), items.dtype)
-            items = np.concatenate([items, pad], axis=0)
+        self.stats["h2d_bytes"] += \
+            sum(leaf.nbytes // B for leaf in leaves) * count
+        if B < self.lanes:
+            items = jax.tree.map(
+                lambda leaf: np.concatenate(
+                    [leaf, np.zeros((self.lanes - B, *leaf.shape[1:]),
+                                    leaf.dtype)], axis=0), items)
         if count == self.lanes:
             if getattr(self, "_active_full", None) is None:
                 self._active_full = jnp.ones((self.lanes,), bool)
@@ -507,7 +604,8 @@ class FarmEngine:
         self.stats["items"] += count
         (self._frames, self._env_frames, outs, red, iters,
          waste) = self._round_fn(
-            self._frames, self._env_frames, jnp.asarray(items), active)
+            self._frames, self._env_frames,
+            jax.tree.map(jnp.asarray, items), active)
         self._waste_buf.append((waste, iters))   # converted lazily
         if len(self._waste_buf) > 64:            # bound the buffer on
             self._flush_waste(keep=2)            # long streams; the old
@@ -557,11 +655,18 @@ class FarmEngine:
         (directly, or per-shard inside shard_map).  Returns the resumed
         carry plus the (1,) body-step count — per shard, because lane
         shards exit their segments independently (no collectives cross
-        the lane axis)."""
+        the lane axis).  The composed backend runs the uniform-schedule
+        variant instead (exactly ``segment`` done-masked steps): its
+        body ppermutes ghost strips along the spatial axes, and a
+        data-dependent early exit on one lane shard would leave the
+        other shards' exchange rendezvous waiting — a fixed step count
+        keeps every shard's collective schedule aligned with still no
+        collective crossing the lane axis."""
         loop = self._loop
         (a, r, it, done), steps = loop.lane_segment(
             (frames, r, it, done), step=self._lane_step(env_frames),
-            segment=self.segment)
+            segment=self.segment,
+            early_exit=loop.backend != "pallas-sharded")
         return a, env_frames, r, it, done, steps[None]
 
     def _segment_entry(self, frames, env_frames, r, it, done):
@@ -571,12 +676,19 @@ class FarmEngine:
         from repro.sharding.specs import shard_map
 
         lane_spec = P(self.lane_axis)
-        env_specs = tuple(lane_spec for _ in env_frames)
+        # composed mode: frames carry the spatial axes too; the segment
+        # still runs per LANE shard (spatial shards of one lane group
+        # share their trip counts through the collective reduce, so the
+        # early exit stays SPMD-uniform within each exchange group)
+        fr_spec = (self._fspec()
+                   if self._loop.backend == "pallas-sharded"
+                   else lane_spec)
+        env_specs = tuple(fr_spec for _ in env_frames)
         fn = shard_map(
             self._local_segment, mesh=self.mesh,
-            in_specs=(lane_spec, env_specs, lane_spec, lane_spec,
+            in_specs=(fr_spec, env_specs, lane_spec, lane_spec,
                       lane_spec),
-            out_specs=(lane_spec, env_specs, lane_spec, lane_spec,
+            out_specs=(fr_spec, env_specs, lane_spec, lane_spec,
                        lane_spec, lane_spec))
         return fn(frames, env_frames, r, it, done)
 
@@ -590,6 +702,9 @@ class FarmEngine:
 
         loop = self._loop
         a0, envs = self._prep1(item)
+        if loop.backend == "pallas-sharded":
+            return self._refill_sharded(frames, env_frames, r, it, done,
+                                        idx, a0, envs)
         if loop.backend == "jnp":
             frames = jax.lax.dynamic_update_slice(
                 frames, a0[None].astype(frames.dtype), (idx, 0, 0))
@@ -610,25 +725,107 @@ class FarmEngine:
         done = done.at[idx].set(False)
         return frames, env_frames, r, it, done
 
+    def _refill_sharded(self, frames, env_frames, r, it, done, idx, a0,
+                        envs):
+        """Composed-mode slot hand-off: ``prep`` already ran on the
+        WHOLE item (halo-aware); its (m, n) result splits at the
+        shard_map boundary, each spatial shard scatters its LOCAL
+        interior block into the owner lane shard's slot (owner-masked —
+        every shard runs the same O(interior) program, only the owner's
+        slot changes), and the ghost rings re-assert through the SAME
+        O(k·n) edge-strip ppermute the loop body uses.  The carry
+        re-arms with a masked select on the (local lanes,) vectors — no
+        collective crosses the lane axis, one compilation per stream."""
+        from repro.sharding.specs import local_slot, shard_map
+        from .frames import (refill_slot_env_sharded,
+                             refill_slot_frame_sharded)
+
+        loop = self._loop
+        fspec = self._fspec()
+        lane_spec = P(self.lane_axis)
+        spatial_spec = P(*self._spatial)
+        local_L = self.lanes // self._nshards
+        halo_env = self._eng._multistep
+
+        def local_refill(frames, env_frames, r, it, done, idx, a_loc,
+                         env_loc):
+            owns, li = local_slot(idx, local_L, self.lane_axis)
+            frames = refill_slot_frame_sharded(
+                frames, a_loc, li, owns, self._lspec, loop.boundary)
+            env_frames = tuple(
+                refill_slot_env_sharded(ef, e, li, owns, self._lspec,
+                                        loop.boundary, halo=halo_env)
+                for ef, e in zip(env_frames, env_loc))
+            upd = jnp.logical_and(owns,
+                                  jnp.arange(r.shape[0]) == li)
+            r = jnp.where(upd, jnp.asarray(loop._id, r.dtype), r)
+            it = jnp.where(upd, jnp.zeros_like(it), it)
+            done = jnp.where(upd, jnp.zeros_like(done), done)
+            return frames, env_frames, r, it, done
+
+        env_specs = tuple(fspec for _ in env_frames)
+        fn = shard_map(
+            local_refill, mesh=self.mesh,
+            in_specs=(fspec, env_specs, lane_spec, lane_spec, lane_spec,
+                      P(), spatial_spec,
+                      tuple(spatial_spec for _ in envs)),
+            out_specs=(fspec, env_specs, lane_spec, lane_spec,
+                       lane_spec))
+        return fn(frames, env_frames, r, it, done, idx, a0, envs)
+
     def _extract_impl(self, frames, idx):
         """Slice ONE lane's (m, n) domain out at a dynamic index — the
         only per-item device→host payload of the continuous path."""
         if self._loop.backend == "jnp":
             return jax.lax.dynamic_index_in_dim(frames, idx, axis=0,
                                                 keepdims=False)
+        if self._loop.backend == "pallas-sharded":
+            from repro.sharding.specs import local_slot, shard_map
+
+            spec = self._lspec.local
+            p = spec.pad
+            local_L = self.lanes // self._nshards
+
+            def local_extract(fr, idx):
+                _, li = local_slot(idx, local_L, self.lane_axis)
+                return jax.lax.dynamic_slice(fr, (li, p, p),
+                                             (1, spec.m, spec.n))
+
+            fn = shard_map(local_extract, mesh=self.mesh,
+                           in_specs=(self._fspec(), P()),
+                           out_specs=P(self.lane_axis, *self._spatial))
+            # every lane shard contributes ITS li-slot's stitched (m, n)
+            # plane; the owner's plane is the result
+            planes = fn(frames, idx)
+            owner = idx // jnp.asarray(local_L, idx.dtype)
+            return jax.lax.dynamic_index_in_dim(planes, owner, axis=0,
+                                                keepdims=False)
         spec = self._lspec.frame
         p = spec.pad
         return jax.lax.dynamic_slice(
             frames, (idx, p, p), (1, spec.m, spec.n))[0]
 
-    def _check_item(self, item: np.ndarray):
-        if (item.shape != self._item_aval.shape[1:]
-                or item.dtype != self._item_aval.dtype):
+    def _check_item(self, item):
+        """Guard EVERY leaf of a stream item — the main array AND any
+        env leaves a tuple item carries — against mid-stream shape/dtype
+        drift.  Without the env check a drifted env leaf sails into the
+        jitted refill and dies as an opaque XLA shape error."""
+        leaves = _item_leaves(item)
+        if len(leaves) != len(self._item_avals):
             raise ValueError(
-                f"stream item shape changed mid-stream: slots are bound "
-                f"to {self._item_aval.shape[1:]}/{self._item_aval.dtype},"
-                f" got {item.shape}/{item.dtype} (build a fresh "
-                "FarmEngine per item geometry)")
+                f"stream item arity changed mid-stream: slots are bound "
+                f"to {len(self._item_avals)} leaves (main + env), got "
+                f"{len(leaves)} (build a fresh FarmEngine per item "
+                "geometry)")
+        for i, (leaf, aval) in enumerate(zip(leaves, self._item_avals)):
+            if leaf.shape != aval.shape or leaf.dtype != aval.dtype:
+                which = ("stream item" if i == 0
+                         else f"env stream item {i - 1}")
+                raise ValueError(
+                    f"{which} shape changed mid-stream: slots are bound "
+                    f"to {aval.shape}/{aval.dtype}, got "
+                    f"{leaf.shape}/{leaf.dtype} (build a fresh "
+                    "FarmEngine per item geometry)")
 
     def _bind_continuous(self):
         """Allocate the continuous carry around the bound slots: the jnp
@@ -636,13 +833,6 @@ class FarmEngine:
         the lane frames ``_bind`` staged) plus the per-lane (r, it, done)
         vectors — all slots start retired (done, unoccupied)."""
         loop = self._loop
-        if loop.backend == "pallas-sharded":
-            raise ValueError(
-                "continuous mode does not compose with pallas-sharded "
-                "lanes yet (a spatially decomposed frame has no single-"
-                "slot global interior to refill); use round-based run() "
-                "or spread lanes over the mesh with a single-device "
-                "backend")
         if getattr(self, "_cont_carry", None) is not None:
             return          # slots + carry persist across streams: the
                             # end state (all lanes retired) is exactly a
@@ -660,9 +850,24 @@ class FarmEngine:
                 self._frames = jax.device_put(frames, lane_sh)
                 self._env_frames = tuple(
                     jax.device_put(e, lane_sh) for e in envs)
-        r_aval = jax.eval_shape(
-            lambda fr, ef: self._lane_step(ef)(fr)[1],
-            self._frames, self._env_frames)
+        if loop.backend == "pallas-sharded":
+            # the per-lane reduce dtype, evaluated abstractly through
+            # the same shard_map the segments run in (the lane frames
+            # _bind staged are already the continuous slots)
+            from repro.sharding.specs import shard_map
+
+            fspec = self._fspec()
+            fn = shard_map(
+                lambda fr, efs: self._eng.sweeps_lanes(
+                    fr, efs, self._lspec)[1],
+                mesh=self.mesh,
+                in_specs=(fspec, tuple(fspec for _ in self._env_frames)),
+                out_specs=P(self.lane_axis))
+            r_aval = jax.eval_shape(fn, self._frames, self._env_frames)
+        else:
+            r_aval = jax.eval_shape(
+                lambda fr, ef: self._lane_step(ef)(fr)[1],
+                self._frames, self._env_frames)
         r0 = np.full((L,), loop._id, np.dtype(r_aval.dtype))
         it0 = np.zeros((L,), np.int32)
         d0 = np.ones((L,), bool)
@@ -693,7 +898,7 @@ class FarmEngine:
             raise ValueError("engine already streamed in round mode; "
                              "build a fresh FarmEngine for continuous")
         self._mode = "continuous"
-        first = np.asarray(first)
+        first = _as_item(first)
         if not self._bound:
             self._bind(first)
         self._bind_continuous()
@@ -711,18 +916,19 @@ class FarmEngine:
                 x, pending = pending, None
                 return x
             x = next(stream, None)
-            return None if x is None else np.asarray(x)
+            return None if x is None else _as_item(x)
 
         def refill(slot, item):
             nonlocal frames, env_frames, r, itv, done, next_index
             self._check_item(item)
             frames, env_frames, r, itv, done = self._refill_fn(
                 frames, env_frames, r, itv, done,
-                jnp.asarray(slot, jnp.int32), jnp.asarray(item))
+                jnp.asarray(slot, jnp.int32),
+                jax.tree.map(jnp.asarray, item))
             occupants[slot] = next_index
             next_index += 1
             prev_it[slot] = 0
-            self.stats["h2d_bytes"] += item.nbytes
+            self.stats["h2d_bytes"] += _item_nbytes(item)
             self.stats["refills"] += 1
 
         try:
@@ -802,7 +1008,7 @@ class FarmEngine:
         inflight = None
         while True:
             batch = list(islice(it, self.lanes))
-            nxt = self.round(np.stack(batch), len(batch)) if batch \
+            nxt = self.round(_stack_items(batch), len(batch)) if batch \
                 else None
             if inflight is not None:
                 n += self._drain(inflight, sink)

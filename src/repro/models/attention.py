@@ -52,11 +52,18 @@ def init_attention(key, d_model, num_heads, num_kv_heads, head_dim, dtype,
     return p
 
 
-def _mask_bias(q_pos, k_pos, *, causal: bool, window: int):
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int, kv_len=None):
     """Additive attention bias (B, Q, S) from position constraints.
 
     ``window`` is the sequence-stencil radius: key j visible to query i iff
     ``i - window < j <= i`` (one-sided causal neighbourhood).
+
+    ``kv_len`` ((B,) or (B, 1) int) is the ragged-prefill prompt-length
+    mask: keys at positions >= the sequence's own prompt length are pad
+    rows of a right-padded prompt and are invisible to EVERY query (the
+    causal mask already hides them from the real queries, whose positions
+    stay below the pad positions; the explicit mask also blinds the pad
+    queries themselves, whose logits are never sampled).
     """
     qp = q_pos[:, :, None]                       # (B, Q, 1)
     kp = k_pos[:, None, :]                       # (B|1, 1, S)
@@ -65,6 +72,8 @@ def _mask_bias(q_pos, k_pos, *, causal: bool, window: int):
         ok &= kp <= qp
     if window:
         ok &= kp > qp - window
+    if kv_len is not None:
+        ok = ok & (kp < jnp.reshape(kv_len, (-1,))[:, None, None])
     return jnp.where(ok, 0.0, NEG_INF)
 
 
@@ -72,7 +81,7 @@ def attention(params: Params, x, *, positions, num_heads, num_kv_heads,
               head_dim, rope_theta=10000.0, causal=True, window=0,
               attn_softcap=0.0, qk_norm=False, norm_eps=1e-6,
               x_kv=None, kv_cache: Optional[dict] = None,
-              cache_pos=None):
+              cache_pos=None, kv_len=None):
     """Returns (out, new_kv_cache or None).
 
     Training/prefill: ``kv_cache=None`` — keys/values from ``x`` (or
@@ -81,6 +90,16 @@ def attention(params: Params, x, *, positions, num_heads, num_kv_heads,
     step's K/V are written at ``cache_pos`` and attention runs over the
     whole cache under the causal(+window) mask.  Cross caches are
     read-only (precomputed from the encoder output).
+
+    ``kv_len`` ((B,) int, ragged padded prefill — continuous batching):
+    each sequence's true prompt length inside a right-padded chunk.  Pad
+    keys are masked out of every attention window, and ring-buffer
+    (sliding-window) caches write each sequence's own last ``min(W,
+    len)`` REAL keys — a pad key never enters the ring.  Full caches may
+    keep pad rows past the prompt: decode overwrites row ``len + t - 1``
+    before any query position reaches it, so they are dead by the causal
+    mask (the no-pad-leak invariant is property-tested in
+    tests/train/test_serve_properties.py).
     """
     B, S, D = x.shape
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
@@ -106,7 +125,9 @@ def attention(params: Params, x, *, positions, num_heads, num_kv_heads,
             # ring buffer (sliding-window layers): slot = position mod W
             ragged = cache_pos is not None and cache_pos.shape[0] > 1
             rk, rv, pos_arr = _ring_write(kv_cache, k, v, positions,
-                                          ragged=ragged)
+                                          ragged=ragged,
+                                          kv_len=kv_len if S > 1
+                                          else None)
             new_cache = {"k": rk, "v": rv, "pos": pos_arr}
             if S > 1:
                 # prefill chunk: queries attend the chunk's OWN keys
@@ -145,7 +166,7 @@ def attention(params: Params, x, *, positions, num_heads, num_kv_heads,
         q = apply_rope(q, positions, rope_theta)
 
     if (USE_FLASH_SWA and kv_cache is None and not is_cross and causal
-            and S % 128 == 0 and not qk_norm):
+            and S % 128 == 0 and not qk_norm and kv_len is None):
         # flash path: (B,S,H,hd) -> (B·H,S,hd); kv stay per-group
         from repro.kernels.swa_attention import swa_attention
         qf = q.transpose(0, 2, 1, 3).reshape(B * num_heads, S, head_dim)
@@ -170,7 +191,8 @@ def attention(params: Params, x, *, positions, num_heads, num_kv_heads,
 
     bias = _mask_bias(positions, k_pos,
                       causal=(causal and not is_cross),
-                      window=(window if not is_cross else 0))
+                      window=(window if not is_cross else 0),
+                      kv_len=(kv_len if not is_cross else None))
     scores = scores + bias[:, None, None]            # (B,1,1,Q,S)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = jnp.einsum("bhgqs,bshk->bqhgk", probs, v)
@@ -179,7 +201,8 @@ def attention(params: Params, x, *, positions, num_heads, num_kv_heads,
     return out, new_cache
 
 
-def _ring_write(cache, k, v, positions, ragged: bool = False):
+def _ring_write(cache, k, v, positions, ragged: bool = False,
+                kv_len=None):
     """Write S_new keys into the W-slot ring at slots ``pos mod W``.
 
     Keys are stored post-RoPE (absolute positions), so the ring only has
@@ -190,9 +213,29 @@ def _ring_write(cache, k, v, positions, ragged: bool = False):
     ``ragged`` (continuous batching, S_new == 1): every sequence decodes
     at its own depth, so each writes its own ring slot — a vmapped
     single-slot write instead of the shared-index fast path.
+
+    ``kv_len`` (ragged padded prefill, S_new > 1): each sequence keeps
+    its OWN last ``min(W, len)`` REAL keys — rows at positions past the
+    prompt length (pads) or below the window map to an out-of-range slot
+    and are dropped, so a pad key never enters the ring and a short
+    prompt never loses in-window keys to the pads' positions.
     """
     W = cache["k"].shape[1]
     S_new = k.shape[1]
+    if kv_len is not None and S_new > 1:
+        kl = jnp.reshape(kv_len, (-1,)).astype(jnp.int32)     # (B,)
+
+        def one(ck, cv, cp, kk, vv, pp, L):
+            valid = jnp.logical_and(pp < L, pp >= L - W)
+            slot = jnp.where(valid, pp % W, W)     # W = OOB, dropped
+            return (ck.at[slot].set(kk.astype(ck.dtype)),
+                    cv.at[slot].set(vv.astype(cv.dtype)),
+                    cp.at[slot].set(pp))
+        return jax.vmap(one)(cache["k"], cache["v"], cache["pos"],
+                             k, v,
+                             jnp.broadcast_to(
+                                 positions, (k.shape[0], S_new))
+                             .astype(jnp.int32), kl)
     if ragged:
         if S_new != 1:
             raise ValueError(

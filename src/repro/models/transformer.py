@@ -160,9 +160,11 @@ def init_params(cfg: ArchConfig, key, max_position: int = 0) -> Params:
 
 def apply_layer(cfg: ArchConfig, spec: LayerSpec, p: Params, x, *,
                 positions, causal=True, cache=None, cache_pos=None,
-                enc_out=None, cross_cache=None):
+                enc_out=None, cross_cache=None, kv_len=None):
     """One block: (attn|ssm) + optional cross-attn + FFN, pre-norm residual.
-    Returns (x, new_cache, aux)."""
+    Returns (x, new_cache, aux).  ``kv_len`` is the ragged-prefill
+    prompt-length mask (self-attention only; see
+    :func:`repro.models.attention.attention`)."""
     aux = {}
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if spec.kind == "attn":
@@ -174,7 +176,8 @@ def apply_layer(cfg: ArchConfig, spec: LayerSpec, p: Params, x, *,
             rope_theta=cfg.rope_theta if cfg.use_rope else 0.0,
             causal=causal, window=spec.window,
             attn_softcap=cfg.attn_softcap, qk_norm=cfg.qk_norm,
-            norm_eps=cfg.norm_eps, kv_cache=cache, cache_pos=cache_pos)
+            norm_eps=cfg.norm_eps, kv_cache=cache, cache_pos=cache_pos,
+            kv_len=kv_len)
         if cfg.attn_sequence_parallel:
             out = _hook("attn_out", out)
         out = _ckpt_name(cfg, out, "block_out")
@@ -230,7 +233,7 @@ def _acc_aux(acc, aux):
 
 def run_stack(cfg: ArchConfig, params: Params, x, *, pattern, positions,
               causal=True, caches=None, cache_pos=None, enc_out=None,
-              cross_caches=None, param_root=None):
+              cross_caches=None, param_root=None, kv_len=None):
     """Apply prefix layers then the scanned repeat unit.
 
     ``caches``/``cross_caches``: {"prefix": [...], "unit": [...]} matching
@@ -247,7 +250,7 @@ def run_stack(cfg: ArchConfig, params: Params, x, *, pattern, positions,
         x, nc, aux = apply_layer(cfg, spec, root["prefix"][i], x,
                                  positions=positions, causal=causal,
                                  cache=c, cache_pos=cache_pos,
-                                 enc_out=enc_out)
+                                 enc_out=enc_out, kv_len=kv_len)
         new_caches["prefix"].append(nc)
         aux_sum = _acc_aux(aux_sum, aux)
 
@@ -264,7 +267,7 @@ def run_stack(cfg: ArchConfig, params: Params, x, *, pattern, positions,
             x, nc, aux = apply_layer(cfg, spec, p, x, positions=positions,
                                      causal=causal, cache=c,
                                      cache_pos=cache_pos, enc_out=enc_out,
-                                     cross_cache=xc)
+                                     cross_cache=xc, kv_len=kv_len)
             nc_out.append(nc)
             aux_acc = _acc_aux(aux_acc, aux)
         return x, (nc_out, aux_acc)
@@ -386,7 +389,8 @@ def prefill_cross_caches(cfg: ArchConfig, params: Params, enc_out):
 
 
 def step_with_cache(cfg: ArchConfig, params: Params, caches, tokens, pos,
-                    patch_embeds=None, enc_out=None, cross_caches=None):
+                    patch_embeds=None, enc_out=None, cross_caches=None,
+                    prompt_len=None):
     """Forward S tokens (S=1 decode, S>1 prefill) writing the cache at
     ``pos``.  Returns (logits, new_caches).
 
@@ -397,6 +401,13 @@ def step_with_cache(cfg: ArchConfig, params: Params, caches, tokens, pos,
     mask and the cache writes all follow per sequence.  Per-sequence
     ``pos`` requires relative position handling (RoPE/none) — absolute
     position embeddings index a table with the uniform offset.
+
+    ``prompt_len`` ((B,) int, prefill of RIGHT-PADDED ragged prompts):
+    each sequence's true prompt length.  Pad keys are masked out of the
+    attention windows and never enter ring-buffer caches; sample the
+    next token from ``logits[b, prompt_len[b] - 1]``, not the last row.
+    Attention-only stacks (SSM state updates are sequential and have no
+    pad-masking path — the serve engine guards this).
     """
     if jnp.ndim(pos) != 0 and cfg.abs_pos_embed:
         raise ValueError(
@@ -412,7 +423,7 @@ def step_with_cache(cfg: ArchConfig, params: Params, caches, tokens, pos,
     x, new_caches, aux = run_stack(
         cfg, params, x, pattern=pattern, positions=positions, causal=True,
         caches=caches, cache_pos=cache_pos, enc_out=enc_out,
-        cross_caches=cross_caches)
+        cross_caches=cross_caches, kv_len=prompt_len)
     return lm_head(cfg, params, x), new_caches
 
 

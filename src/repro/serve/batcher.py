@@ -1,11 +1,20 @@
 """Request batching for the serving engine (the stream tier, 1:1 mode).
 
-Host-side dynamic batcher: requests arrive with ragged prompts; the
-batcher groups them by EXACT prompt length (no padding enters the
-attention window — pad tokens in the causal past would corrupt the
-shorter prompts), forms FIFO batches up to ``max_batch`` per group, and
-drives each batch through ONE fused generate loop (prefill +
-Loop-of-stencil-reduce-s decode).
+Host-side dynamic batcher.  The ROUND path (:meth:`Batcher.run_all`)
+groups ragged prompts by EXACT length (no padding enters the attention
+window), forms FIFO batches up to ``max_batch`` per group, and drives
+each batch through ONE fused generate loop (prefill +
+Loop-of-stencil-reduce-s decode) with per-request ``max_new_tokens``
+budgets threaded into the done-mask.
+
+The CONTINUOUS path (:meth:`Batcher.run_continuous`) admits the WHOLE
+ragged queue into one :class:`repro.serve.engine.ContinuousEngine` slot
+pool bound at the queue's ``max_prompt_len`` — padded per-slot prefill
+with a prompt-length mask (DESIGN.md §Serve), results emitted mid-batch
+in completion order, ``stats["idle_slot_steps"]`` strictly below the
+old one-engine-per-length-group scheme (which idled a whole cohort at
+every group tail).  SSM/hybrid archs fall back to exact-length grouping
+automatically (their state updates have no pad-masking path).
 
 This is the paper's farm over stream items at serving scale: every
 batch is an independent stream item for the device; done-masked decode
@@ -13,10 +22,7 @@ lets requests inside a batch finish at their own lengths.  The drain
 loop uses the stream tier's host-side double buffering (the
 :class:`repro.core.streaming.FarmEngine` protocol): batch i+1 is
 dispatched asynchronously before batch i's tokens are pulled to the
-host, so tokenisation/detokenisation overlaps device decode.  Length
-bucketing with proper pad masking is the next step and is noted in
-DESIGN.md; exact grouping keeps the compile cache small when clients
-quantise prompt lengths themselves.
+host, so tokenisation/detokenisation overlaps device decode.
 """
 from __future__ import annotations
 
@@ -74,17 +80,30 @@ class Batcher:
 
     def _dispatch(self, batch: List[Request]):
         """Launch one batch's generate loop (async dispatch — returns
-        device futures, no host sync)."""
+        device futures, no host sync).  Per-request ``max_new_tokens``
+        budgets ride the done-mask through the SAME validation rule as
+        the continuous engine's (`engine.request_budget` — their parity
+        is regression-tested)."""
+        from .engine import request_budget
+
+        cap = self.gcfg.max_new_tokens
         toks = np.stack([r.prompt for r in batch]).astype(np.int32)
+        budgets = np.asarray([request_budget(r, cap) for r in batch],
+                             np.int32)
         gen, lengths, _ = generate(
             self.cfg, self.params, jnp.asarray(toks), self.gcfg,
-            cache_dtype=self.cache_dtype)
+            cache_dtype=self.cache_dtype, budgets=jnp.asarray(budgets))
         return batch, gen, lengths
 
     @staticmethod
     def _drain(inflight, out: List[Result]):
         batch, gen, lengths = inflight
-        gen = np.asarray(gen)                # blocks on this batch only
+        # ONE device→host pull per array per batch (this is where the
+        # host blocks on the in-flight round) — indexing the
+        # device-resident ``lengths`` element-by-element would issue one
+        # blocking transfer per request
+        gen = np.asarray(gen)
+        lengths = np.asarray(lengths)
         for i, r in enumerate(batch):
             out.append(Result(rid=r.rid, tokens=gen[i, :int(lengths[i])]))
 
@@ -109,24 +128,50 @@ class Batcher:
             self._drain(inflight, out)
         return out
 
-    def run_continuous(self) -> List[Result]:
+    def run_continuous(self, exact_groups: Optional[bool] = None
+                       ) -> List[Result]:
         """Drain the queue with continuous batching (per-sequence KV-slot
         refill, :class:`repro.serve.engine.ContinuousEngine`).
 
-        Requests still group by EXACT prompt length (the no-pad
-        contract), but within a group the whole queue streams through
-        ``max_batch`` persistent slots: a finished sequence's result is
-        emitted mid-batch — before the longest sequence of its cohort
-        completes — and its KV slot is immediately prefilled with the
-        next queued request.  Results arrive in completion order.  The
-        engines used are kept on ``self.engines`` (one per prompt-length
-        group) so callers can inspect ``stats`` — e.g. that segment and
-        prefill trace counts stayed at 1.
+        The WHOLE ragged queue streams through ONE engine binding at the
+        queue's max prompt length: each request is admitted by a padded
+        per-slot prefill under its own prompt-length mask, a finished
+        sequence's result is emitted mid-batch — before the longest
+        sequence of its cohort completes — and its KV slot is
+        immediately prefilled with the next queued request, whatever its
+        length.  Results arrive in completion order.  The engine(s) used
+        are kept on ``self.engines`` so callers can inspect ``stats`` —
+        e.g. that segment and prefill trace counts stayed at 1, or the
+        ``idle_slot_steps`` the single pool saves.
+
+        ``exact_groups=True`` restores the old one-engine-per-exact-
+        prompt-length scheme (each group idles its whole cohort at the
+        group tail — kept as the measurable baseline for the
+        ``idle_slot_steps`` comparison, and the automatic fallback for
+        SSM/hybrid archs, whose sequential state updates have no
+        pad-masking path).
         """
-        from .engine import ContinuousEngine
+        from .engine import ContinuousEngine, _arch_has_ssm
 
         out: List[Result] = []
         self.engines: List[ContinuousEngine] = []
+        if not self._queue:
+            return out
+        if exact_groups is None:
+            exact_groups = _arch_has_ssm(self.cfg)
+        if not exact_groups:
+            maxL = max(len(r.prompt) for r in self._queue)
+            # construct BEFORE emptying the queue: an unsupported cfg
+            # (abs-pos/enc-dec/vision) raises here and the submitted
+            # requests stay queued for run_all()/exact groups
+            eng = ContinuousEngine(
+                self.cfg, self.params, self.gcfg, slots=self.max_batch,
+                cache_dtype=self.cache_dtype, max_prompt_len=maxL)
+            queue, self._queue = self._queue, []
+            eng.run(queue, lambda rid, toks: out.append(
+                Result(rid=rid, tokens=toks)))
+            self.engines.append(eng)
+            return out
         while self._queue:
             L = len(self._queue[0].prompt)      # FIFO head sets the group
             group = [r for r in self._queue if len(r.prompt) == L]

@@ -57,8 +57,17 @@ def prefill(cfg: ArchConfig, params, tokens, *, max_seq: int,
 
 def generate(cfg: ArchConfig, params, prompt, gcfg: GenerateConfig, *,
              max_seq: Optional[int] = None, cache_dtype=jnp.bfloat16,
-             enc_out=None, cross_caches=None, patch_embeds=None):
-    """Batched generation.  Returns (tokens (B, max_new), lengths, iters)."""
+             enc_out=None, cross_caches=None, patch_embeds=None,
+             budgets=None):
+    """Batched generation.  Returns (tokens (B, max_new), lengths, iters).
+
+    ``budgets`` is an optional (B,) int vector of per-sequence
+    ``max_new_tokens`` (each in [1, gcfg.max_new_tokens]): the
+    done-mask retires a sequence at its OWN budget, mirroring the
+    continuous engine's per-request budgets, so round-mode batches honor
+    ``Request.max_new_tokens`` identically.  ``lengths`` is clipped to
+    the budget (post-done positions are eos-padded in ``out``).
+    """
     B, S0 = prompt.shape
     P = cfg.vision_patches or 0
     max_seq = max_seq or (S0 + P + gcfg.max_new_tokens)
@@ -74,11 +83,13 @@ def generate(cfg: ArchConfig, params, prompt, gcfg: GenerateConfig, *,
                                           axis=-1)
         return jnp.argmax(logits, axis=-1)
 
+    bud = (jnp.full((B,), gcfg.max_new_tokens, jnp.int32)
+           if budgets is None else jnp.asarray(budgets, jnp.int32))
     key0 = jax.random.PRNGKey(gcfg.seed)
     first = sample(last_logits, key0)                     # (B,)
     out0 = jnp.zeros((B, gcfg.max_new_tokens), jnp.int32)
     out0 = out0.at[:, 0].set(first)
-    done0 = first == gcfg.eos_id
+    done0 = jnp.logical_or(first == gcfg.eos_id, bud <= 1)
 
     def step_fn(carry):
         caches, out, done, t, key = carry
@@ -89,9 +100,14 @@ def generate(cfg: ArchConfig, params, prompt, gcfg: GenerateConfig, *,
         key, sub = jax.random.split(key)
         nxt = sample(logits[:, 0], sub)
         nxt = jnp.where(done, jnp.full_like(nxt, gcfg.eos_id), nxt)
-        out = jax.lax.dynamic_update_slice_in_dim(
-            out, nxt[:, None].astype(out.dtype), t, axis=1)
-        done = done | (nxt == gcfg.eos_id)
+        if gcfg.max_new_tokens > 1:
+            # cap == 1: the repeat/until still runs its one mandatory
+            # body step, whose write index (t=1) would CLIP onto column
+            # 0 and eos-pad over the only real token — skip it (every
+            # lane is already done0-retired at cap 1)
+            out = jax.lax.dynamic_update_slice_in_dim(
+                out, nxt[:, None].astype(out.dtype), t, axis=1)
+        done = done | (nxt == gcfg.eos_id) | (t + 1 >= bud)
         return (caches, out, done, t + 1, key)
 
     loop = LoopOfStencilReduce(
@@ -107,6 +123,9 @@ def generate(cfg: ArchConfig, params, prompt, gcfg: GenerateConfig, *,
     lengths = jnp.where(
         (out == gcfg.eos_id).any(axis=1),
         (out == gcfg.eos_id).argmax(axis=1) + 1, gcfg.max_new_tokens)
+    # a budget-retired sequence has eos PADS from its budget on — clip
+    # so the pad never counts as a sampled token
+    lengths = jnp.minimum(lengths, bud)
     return out, lengths, res.iters
 
 
@@ -118,6 +137,31 @@ def generate_jit(cfg: ArchConfig, gcfg: GenerateConfig, **kw):
 # ---------------------------------------------------------------------------
 # Continuous batching — per-sequence KV-slot refill.
 # ---------------------------------------------------------------------------
+
+
+def request_budget(req, cap: int) -> int:
+    """Resolve a request's per-sequence token budget against the engine
+    cap — the ONE validation rule shared by the round path
+    (:meth:`repro.serve.batcher.Batcher.run_all`) and the continuous
+    engine, so the two paths cannot drift (their budget parity is
+    regression-tested)."""
+    bud = getattr(req, "max_new_tokens", None)
+    bud = cap if bud is None else bud
+    if not 1 <= bud <= cap:
+        raise ValueError(
+            f"request budget {bud} outside [1, max_new_tokens={cap}] "
+            "(the slot width)")
+    return bud
+
+
+def _arch_has_ssm(cfg: ArchConfig) -> bool:
+    """Whether the stack carries SSM layers — their sequential state
+    updates have no pad-masking path, so ragged (padded) prefill is
+    attention-only."""
+    pattern = (cfg.decoder_pattern() if cfg.is_encoder_decoder
+               else cfg.block_pattern())
+    prefix, unit, _ = pattern
+    return any(s.kind == "ssm" for s in (*prefix, *unit))
 
 
 class ContinuousEngine:
@@ -142,17 +186,32 @@ class ContinuousEngine:
     stream (``stats["segment_traces"]`` / ``stats["prefill_traces"]``
     count trace events; both stay 1 after the first request).
 
-    Constraints: all requests of one engine share an exact prompt length
-    (the Batcher's grouping contract — no pad tokens ever enter the
-    causal past), per-request ``max_new_tokens`` is capped by the
-    engine-level ``gcfg.max_new_tokens`` (the slot width), and models
-    with absolute position embeddings, encoders or vision prefixes are
-    not supported (their position bookkeeping is not per-sequence).
+    Prompts may be RAGGED: the engine binds ONE slot pool at
+    ``max_prompt_len`` (given, or the longest prompt of the first run)
+    and admits each request through a right-padded per-slot prefill with
+    a prompt-length mask (:func:`repro.models.transformer.
+    step_with_cache` ``prompt_len=``) — pad keys never enter an
+    attention window or a ring cache, the first token is sampled at the
+    prompt's own last REAL row, and decode continues from each slot's
+    own depth.  ``stats["idle_slot_steps"]`` (the farm tier's
+    ``wasted_lane_steps`` analogue) counts slot-steps burned on retired
+    or done-masked slots; draining a ragged queue through one pool keeps
+    it strictly below exact-length grouping, which idles a whole cohort
+    at every group tail.
+
+    Constraints: per-request ``max_new_tokens`` is capped by the
+    engine-level ``gcfg.max_new_tokens`` (the slot width); models with
+    absolute position embeddings, encoders or vision prefixes are not
+    supported (their position bookkeeping is not per-sequence); ragged
+    admission needs an attention-only stack (SSM state updates are
+    sequential and have no pad-masking path — group those by exact
+    length upstream, as :meth:`repro.serve.batcher.Batcher.
+    run_continuous` does automatically).
     """
 
     def __init__(self, cfg: ArchConfig, params, gcfg: GenerateConfig, *,
                  slots: int = 8, cache_dtype=jnp.bfloat16,
-                 segment: int = 8):
+                 segment: int = 8, max_prompt_len: Optional[int] = None):
         if cfg.abs_pos_embed or cfg.is_encoder_decoder or \
                 cfg.vision_patches:
             raise ValueError(
@@ -164,19 +223,21 @@ class ContinuousEngine:
         self.cfg, self.params, self.gcfg = cfg, params, gcfg
         self.slots, self.cache_dtype = slots, cache_dtype
         self.segment = segment
+        self.max_prompt_len = max_prompt_len
         self._bound = False
         self._segment_fn = jax.jit(self._segment_impl,
-                                   donate_argnums=(1, 2, 3, 4, 5, 6))
+                                   donate_argnums=(1, 2, 3, 4, 5, 6, 7))
         self._prefill_fn = jax.jit(self._prefill_impl,
-                                   donate_argnums=(1, 2, 3, 4, 5, 6))
+                                   donate_argnums=(1, 2, 3, 4, 5, 6, 7))
         self.stats = {"requests": 0, "segments": 0, "prefills": 0,
                       "emitted": 0, "segment_traces": 0,
-                      "prefill_traces": 0}
+                      "prefill_traces": 0, "slot_steps": 0,
+                      "idle_slot_steps": 0}
 
-    # -- static geometry (first prompt binds the shapes) -----------------
+    # -- static geometry (first run binds the shapes) --------------------
     def _bind(self, prompt_len: int):
         B, cap = self.slots, self.gcfg.max_new_tokens
-        self._S0 = prompt_len
+        self._S0 = prompt_len                   # slot (max) prompt width
         self._max_seq = prompt_len + cap
         self._caches = T.init_cache(self.cfg, B, self._max_seq,
                                     self.cache_dtype)
@@ -185,6 +246,7 @@ class ContinuousEngine:
         self._t = jnp.ones((B,), jnp.int32)     # tokens generated
         self._budget = jnp.ones((B,), jnp.int32)
         self._keys = jnp.zeros((B, 2), jnp.uint32)
+        self._plen = jnp.full((B,), prompt_len, jnp.int32)
         self._bound = True
 
     def _sample(self, logits, key):
@@ -195,18 +257,24 @@ class ContinuousEngine:
 
     # -- slot prefill: hand a finished slot to the next request ----------
     def _prefill_impl(self, params, caches, out, done, t, budget, keys,
-                      idx, prompt, bud, key):
+                      plens, idx, prompt, plen, bud, key):
         """Admit one request into slot ``idx`` (dynamic): prefill its
-        prompt into a fresh single-sequence cache, write that cache over
-        the slot (one whole-slot dynamic_update_slice per leaf — this is
-        the slot hand-off, and it evicts the previous occupant's stale
-        keys wholesale), sample the first token, and re-arm the slot's
-        carry.  One compilation serves every admission."""
+        RIGHT-PADDED prompt into a fresh single-sequence cache under the
+        ``plen`` prompt-length mask, write that cache over the slot (one
+        whole-slot dynamic_update_slice per leaf — this is the slot
+        hand-off, and it evicts the previous occupant's stale keys
+        wholesale), sample the first token at the prompt's own last REAL
+        row, and re-arm the slot's carry.  One compilation serves every
+        admission — the padded prompt width is the bound
+        ``max_prompt_len``, whatever the request's true length."""
         self.stats["prefill_traces"] += 1       # traced once per stream
         fresh = T.init_cache(self.cfg, 1, self._max_seq, self.cache_dtype)
         logits, fresh = T.step_with_cache(self.cfg, params, fresh,
-                                          prompt[None], 0)
-        first = self._sample(logits[:, -1], key)[0]
+                                          prompt[None], 0,
+                                          prompt_len=plen[None])
+        last = jax.lax.dynamic_index_in_dim(logits[0], plen - 1, axis=0,
+                                            keepdims=True)     # (1, V)
+        first = self._sample(last, key)[0]
 
         def slot_write(axis):
             return lambda b, f: jax.lax.dynamic_update_slice_in_dim(
@@ -221,14 +289,18 @@ class ContinuousEngine:
         t = t.at[idx].set(1)
         budget = budget.at[idx].set(bud)
         keys = keys.at[idx].set(key)
-        return caches, out, done, t, budget, keys
+        plens = plens.at[idx].set(plen)
+        return caches, out, done, t, budget, keys, plens
 
     # -- one bounded decode segment --------------------------------------
-    def _segment_impl(self, params, caches, out, done, t, budget, keys):
+    def _segment_impl(self, params, caches, out, done, t, budget, keys,
+                      plens):
         """Advance every live slot up to ``segment`` decode steps,
         returning as soon as any sequence newly finishes (EOS or its own
         token budget).  Per-sequence positions: slot b reads its last
-        token at out[b, t_b-1] and writes the cache at S0 + t_b - 1."""
+        token at out[b, t_b-1] and writes the cache at plen_b + t_b - 1
+        (each slot decodes from its OWN prompt depth — ragged prompts
+        share the pool)."""
         self.stats["segment_traces"] += 1       # traced once per stream
         from repro.core.pattern import segmented_while
 
@@ -239,7 +311,7 @@ class ContinuousEngine:
             caches, out, done, t, keys = carry
             live = jnp.logical_not(done)
             tok = jnp.take_along_axis(out, (t - 1)[:, None], axis=1)
-            pos = (self._S0 + t - 1)[:, None]            # (B, 1)
+            pos = (plens + t - 1)[:, None]               # (B, 1)
             logits, caches = T.decode_step(self.cfg, params, caches,
                                            tok, pos)
             if self.gcfg.temperature > 0:
@@ -264,57 +336,62 @@ class ContinuousEngine:
         (caches, out, done, t, keys), steps = segmented_while(
             body, (caches, out, done, t, keys),
             finished=lambda c: c[2], segment=self.segment)
-        return caches, out, done, t, budget, keys, steps
+        return caches, out, done, t, budget, keys, plens, steps
 
     # -- the dispatcher ---------------------------------------------------
     def run(self, requests, emit) -> int:
-        """Serve ``requests`` (same prompt length; ``.max_new_tokens``
-        may differ wildly) through the slots, calling ``emit(rid,
-        tokens)`` the moment each finishes — completion order, mid-batch.
-        Returns the number of emissions."""
+        """Serve ``requests`` (RAGGED prompt lengths and wildly
+        different ``.max_new_tokens`` welcome) through the slots,
+        calling ``emit(rid, tokens)`` the moment each finishes —
+        completion order, mid-batch.  Returns the number of emissions.
+        """
         queue = list(requests)
         if not queue:
             return 0
-        S0 = len(queue[0].prompt)
         cap = self.gcfg.max_new_tokens
-
-        def budget_of(req) -> int:
-            bud = getattr(req, "max_new_tokens", None)
-            return cap if bud is None else bud
-
-        for r in queue:
-            if len(r.prompt) != S0:
+        lens = [len(r.prompt) for r in queue]
+        bound = (self._S0 if self._bound
+                 else (self.max_prompt_len or max(lens)))
+        for r, L in zip(queue, lens):
+            if not 1 <= L <= bound:
                 raise ValueError(
-                    "one ContinuousEngine serves one exact prompt "
-                    f"length; got {len(r.prompt)} != {S0} (group "
-                    "upstream, as Batcher does)")
-            bud = budget_of(r)
-            if not 1 <= bud <= cap:
-                raise ValueError(
-                    f"request budget {bud} outside [1, "
-                    f"gcfg.max_new_tokens={cap}] (the slot width)")
-        if not self._bound:
-            self._bind(S0)
-        elif S0 != self._S0:
+                    f"prompt length {L} outside [1, max_prompt_len="
+                    f"{bound}] (the slot pool's bound prompt width; "
+                    "build the engine with a larger max_prompt_len)")
+            request_budget(r, cap)
+        if any(L != bound for L in lens) and _arch_has_ssm(self.cfg):
             raise ValueError(
-                f"engine bound to prompt length {self._S0}; got {S0}")
+                "ragged prompts need an attention-only stack (an SSM "
+                "layer's state update is sequential — a pad token would "
+                "corrupt it); group requests by exact prompt length "
+                "upstream, as Batcher.run_continuous does for SSM archs")
+        if not self._bound:
+            self._bind(bound)
         queue = queue[::-1]                     # pop() = FIFO order
         caches, out, done = self._caches, self._out, self._done
         t, budget, keys = self._t, self._budget, self._keys
+        plens = self._plen
         occupants = [None] * self.slots
         base_key = jax.random.PRNGKey(self.gcfg.seed)
         n_emit = 0
+        prev_t = np.asarray(t).astype(np.int64)
 
         def admit(slot, req):
-            nonlocal caches, out, done, t, budget, keys
-            bud = budget_of(req)
+            nonlocal caches, out, done, t, budget, keys, plens
+            bud = request_budget(req, cap)
+            ptoks = np.asarray(req.prompt, np.int32)
+            prompt = np.zeros((self._S0,), np.int32)    # right-padded
+            prompt[:len(ptoks)] = ptoks
             key = jax.random.fold_in(base_key, self.stats["prefills"])
-            caches, out, done, t, budget, keys = self._prefill_fn(
-                self.params, caches, out, done, t, budget, keys,
-                jnp.asarray(slot, jnp.int32),
-                jnp.asarray(np.asarray(req.prompt), jnp.int32),
+            (caches, out, done, t, budget, keys,
+             plens) = self._prefill_fn(
+                self.params, caches, out, done, t, budget, keys, plens,
+                jnp.asarray(slot, jnp.int32), jnp.asarray(prompt),
+                jnp.asarray(len(ptoks), jnp.int32),
                 jnp.asarray(bud, jnp.int32), key)
             occupants[slot] = req
+            prev_t[slot] = 1            # the prefilled first token is
+                                        # not a segment step
             self.stats["prefills"] += 1
             self.stats["requests"] += 1
 
@@ -325,13 +402,22 @@ class ContinuousEngine:
                 admit(slot, queue.pop())
 
             while any(o is not None for o in occupants):
-                (caches, out, done, t, budget, keys,
-                 _steps) = self._segment_fn(self.params, caches, out,
-                                            done, t, budget, keys)
+                (caches, out, done, t, budget, keys, plens,
+                 steps) = self._segment_fn(self.params, caches, out,
+                                           done, t, budget, keys, plens)
                 self.stats["segments"] += 1
                 done_h = np.asarray(done)
-                t_h = np.asarray(t)
+                t_h = np.asarray(t).astype(np.int64)
                 out_h = np.asarray(out)
+                # idle-slot accounting (the wasted_lane_steps analogue):
+                # each body step advances every LIVE slot one token;
+                # retired/done-masked slots burn the step
+                steps_h = int(steps)
+                useful = int((t_h - prev_t).sum())
+                self.stats["slot_steps"] += steps_h * self.slots
+                self.stats["idle_slot_steps"] += \
+                    steps_h * self.slots - useful
+                prev_t = t_h.copy()
                 for slot in range(self.slots):
                     if occupants[slot] is None or not done_h[slot]:
                         continue
@@ -349,4 +435,5 @@ class ContinuousEngine:
             # device buffers
             self._caches, self._out, self._done = caches, out, done
             self._t, self._budget, self._keys = t, budget, keys
+            self._plen = plens
         return n_emit

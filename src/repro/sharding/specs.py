@@ -19,6 +19,7 @@ import dataclasses
 from typing import Any, Callable, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -71,6 +72,24 @@ def shard_map(f: Callable, mesh: Mesh, in_specs, out_specs):
     from jax.experimental.shard_map import shard_map as _sm
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=False)
+
+
+def local_slot(idx, lanes_local: int, axis: str):
+    """Map a GLOBAL lane-slot index onto this shard of mesh ``axis``.
+
+    Runs inside ``shard_map``: each lane shard owns ``lanes_local``
+    consecutive slots, so slot ``idx`` lives at local index
+    ``idx - axis_index * lanes_local`` on exactly one shard.  Returns
+    ``(owns, local_idx)`` with ``local_idx`` clipped into range — always
+    safe to index with, while ``owns`` masks the actual write (the
+    owner-masked scatter of the composed continuous farm refill,
+    :func:`repro.core.frames.refill_slot_frame_sharded`).  Pure local
+    arithmetic: no collective touches the lane axis.
+    """
+    me = jax.lax.axis_index(axis)
+    li = idx - me * lanes_local
+    owns = jnp.logical_and(li >= 0, li < lanes_local)
+    return owns, jnp.clip(li, 0, lanes_local - 1)
 
 
 @dataclasses.dataclass(frozen=True)

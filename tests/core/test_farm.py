@@ -381,7 +381,7 @@ class TestContinuousFarm:
         outs.sort(key=lambda r: r.index)
         assert [int(o.iters) for o in outs] == [5, 2]
 
-    def test_mode_mixing_and_sharded_rejected(self):
+    def test_mode_mixing_rejected(self):
         eng = FarmEngine(mk_countdown("jnp"), lanes=2)
         eng.run(trip_items([2, 3]), lambda r: None)
         with pytest.raises(ValueError, match="round mode"):
@@ -392,6 +392,12 @@ class TestContinuousFarm:
             eng.round(np.stack(trip_items([2, 3])))
         with pytest.raises(ValueError, match="segment"):
             FarmEngine(mk_countdown("jnp"), lanes=2, segment=0)
+
+    def test_composed_sharded_continuous_accepted(self):
+        """The PR-4 rejection is GONE: a composed (lanes × spatial)
+        engine streams continuously — parity and waste are pinned by
+        the multi-device matrix in TestComposedContinuous; here the
+        1×1-mesh degenerate case runs in process."""
         from repro.core import GridPartition
         mesh = jax.make_mesh((1, 1), ("lanes", "model"))
         part = GridPartition(mesh=mesh, axis_names=("model",),
@@ -400,9 +406,13 @@ class TestContinuousFarm:
             f=countdown, cond=lambda r: r < 0.5, combine="max",
             backend="pallas-sharded", partition=part, interpret=True,
             block=(32, 128))
-        eng = FarmEngine(loop, lanes=1, mesh=mesh, lane_axis="lanes")
-        with pytest.raises(ValueError, match="continuous mode"):
-            eng.run(trip_items([2]), lambda r: None, continuous=True)
+        eng = FarmEngine(loop, lanes=1, mesh=mesh, lane_axis="lanes",
+                         segment=4)
+        outs = []
+        assert eng.run(trip_items([3, 5]), outs.append,
+                       continuous=True) == 2
+        outs.sort(key=lambda r: r.index)
+        assert [int(o.iters) for o in outs] == [3, 5]
 
     def test_sink_exception_does_not_corrupt_the_engine(self):
         """A raising sink must leave the engine on LIVE buffers — the
@@ -521,6 +531,64 @@ class TestContinuousJaxpr:
                             >= 2 * np.prod(spec.shape)):
                         raise AssertionError(
                             f"frame-stack allocation in refill: {e}")
+
+
+class TestEnvStreamItems:
+    """Tuple stream items ``(a, *env)`` carry externally produced env
+    fields through both modes, and EVERY leaf — env included — is
+    guarded against mid-stream shape/dtype drift (regression: only the
+    main leaf was checked, so a drifted env leaf reached the jitted
+    refill and died as an opaque XLA shape error)."""
+
+    @staticmethod
+    def _mkloop():
+        return LoopOfStencilReduce(
+            f=R.restore_taps(2.0), k=1, combine="max",
+            cond=lambda r: r < 1e-3, delta=R.abs_delta,
+            boundary="reflect", max_iters=24, backend="pallas",
+            interpret=True, block=(32, 128))
+
+    @staticmethod
+    def _items(rng, n=5):
+        base = [np.asarray(x) for x in mixed_batch(rng, n=n)]
+        return [(b, b, (b > 1.0).astype(np.float32)) for b in base]
+
+    @pytest.mark.parametrize("continuous", [False, True])
+    def test_tuple_items_match_solo_runs(self, continuous, rng):
+        loop = self._mkloop()
+        items = self._items(rng)
+        eng = FarmEngine(loop, lanes=2, segment=6)
+        outs = []
+        assert eng.run(items, outs.append, continuous=continuous) == 5
+        if continuous:
+            outs.sort(key=lambda r: r.index)
+        for it, res in zip(items, outs):
+            ref = loop.run(jnp.asarray(it[0]),
+                           env=(jnp.asarray(it[1]), jnp.asarray(it[2])))
+            assert int(res.iters) == int(ref.iters)
+            np.testing.assert_allclose(np.asarray(res.a),
+                                       np.asarray(ref.a), atol=1e-5)
+
+    @pytest.mark.parametrize("continuous", [False, True])
+    def test_env_item_drift_is_guarded(self, continuous, rng):
+        """A drifted ENV leaf mid-stream must raise the same loud
+        build-a-fresh-FarmEngine error the main leaf gets — not an XLA
+        shape error from inside the jitted refill."""
+        items = self._items(rng, n=4)
+        a2 = items[2]
+        bad = items[:2] + [(a2[0], a2[1],
+                            np.zeros((8, 8), np.float32))]
+        eng = FarmEngine(self._mkloop(), lanes=2, segment=6)
+        with pytest.raises(ValueError, match="env stream item.*fresh "
+                                             "FarmEngine"):
+            eng.run(bad, lambda r: None, continuous=continuous)
+
+    def test_env_item_arity_drift_is_guarded(self, rng):
+        items = self._items(rng, n=3)
+        bad = items[:2] + [(items[2][0], items[2][1])]   # env leaf lost
+        eng = FarmEngine(self._mkloop(), lanes=2, segment=6)
+        with pytest.raises(ValueError, match="arity changed"):
+            eng.run(bad, lambda r: None, continuous=True)
 
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "..", "src")
@@ -679,6 +747,182 @@ print("OKCOMPOSED")
         fake2 = SimpleNamespace(axis_names=("data",), shape={"data": 2})
         with pytest.raises(ValueError, match="divide"):
             FarmEngine(mkloop("pallas"), lanes=3, mesh=fake2)
+
+
+COMPOSED_PRELUDE = """
+import os, sys
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import FarmEngine, GridPartition, LoopOfStencilReduce
+
+def countdown(get, *_):
+    return get(0, 0) - 1.0
+
+def mk(part, max_iters=256):
+    return LoopOfStencilReduce(
+        f=countdown, k=1, combine="max", cond=lambda r: r < 0.5,
+        boundary="zero", max_iters=max_iters, backend="pallas-sharded",
+        partition=part, interpret=True, block=(16, 128))
+
+def trip_items(trips, shape=(32, 64)):
+    base = np.linspace(0.1, 0.9, shape[0] * shape[1],
+                       dtype=np.float32).reshape(shape)
+    return [base + float(t) - 1.0 for t in trips]
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+part = GridPartition(mesh=mesh, axis_names=("model",), array_axes=(0,))
+"""
+
+
+@pytest.mark.slow
+class TestComposedContinuous:
+    """The tentpole acceptance on the composed (lanes × spatial)
+    deployment, in an 8-virtual-device subprocess: continuous refill
+    matches round mode item for item on adversarial trip-count spreads,
+    strictly cuts the barrier's wasted lane sweeps on non-uniform
+    spreads, compiles once per entry point, and is structurally clean
+    (no pad, owner-masked interior-sized refill writes, collectives
+    along the SPATIAL axes only — nothing crosses the lane axis)."""
+
+    def test_parity_matrix_and_waste_drop(self):
+        out = run_multidevice(COMPOSED_PRELUDE + """
+SPREADS = {
+    "uniform": [6] * 8,
+    "bimodal": [1, 200, 1, 1, 200, 1, 1, 1, 1, 1, 1, 1],
+    "straggler": [2, 2, 2, 200, 2, 2, 2, 2],
+}
+for name, trips in SPREADS.items():
+    items = trip_items(trips)
+    eng_r = FarmEngine(mk(part), lanes=4, mesh=mesh)
+    r_outs = []
+    assert eng_r.run(items, r_outs.append) == len(trips)
+    eng_c = FarmEngine(mk(part), lanes=4, mesh=mesh, segment=8)
+    c_outs = []
+    assert eng_c.run(items, c_outs.append, continuous=True) == len(trips)
+    assert sorted(r.index for r in c_outs) == list(range(len(trips)))
+    c_outs.sort(key=lambda r: r.index)
+    for i, (ro, co) in enumerate(zip(r_outs, c_outs)):
+        assert int(ro.iters) == int(co.iters) == trips[i], (
+            name, i, ro.iters, co.iters)
+        np.testing.assert_array_equal(np.asarray(ro.a), co.a)
+    assert eng_c.stats["segment_traces"] == 1
+    assert eng_c.stats["refill_traces"] == 1
+    if name != "uniform":
+        assert eng_c.wasted_lane_steps < eng_r.wasted_lane_steps, (
+            name, eng_c.wasted_lane_steps, eng_r.wasted_lane_steps)
+print("OKMATRIX")
+""")
+        assert "OKMATRIX" in out
+
+    def test_one_compilation_and_completion_order(self):
+        """A straggler sharing the pool with 1-sweep items must NOT gate
+        their emission, and a second stream through the same engine must
+        not retrace."""
+        out = run_multidevice(COMPOSED_PRELUDE + """
+eng = FarmEngine(mk(part), lanes=4, mesh=mesh, segment=4)
+order = []
+n = eng.run(trip_items([200, 1, 1, 1, 1, 1]),
+            lambda r: order.append(r.index), continuous=True)
+assert n == 6, n
+assert order[-1] == 0, order       # the straggler emits LAST
+assert eng.stats["segment_traces"] == 1
+assert eng.stats["refill_traces"] == 1
+eng.run(trip_items([2, 3]), lambda r: None, continuous=True)
+assert eng.stats["segment_traces"] == 1    # no retrace across streams
+assert eng.stats["refill_traces"] == 1
+print("OKORDER")
+""")
+        assert "OKORDER" in out
+
+    def test_steady_state_jaxpr_is_pad_free_and_lane_local(self):
+        out = run_multidevice(COMPOSED_PRELUDE + """
+from repro.core.introspect import flatten_eqns
+eng = FarmEngine(mk(part), lanes=4, mesh=mesh, segment=4)
+eng.run(trip_items([3, 5, 4, 2, 6]), lambda r: None, continuous=True)
+r, it, done = eng._cont_carry
+
+def collective_axes(eqns):
+    axes = set()
+    for e in eqns:
+        if e.primitive.name in ("ppermute", "psum", "pmax", "pmin",
+                                "all_gather", "all_to_all",
+                                "reduce_scatter"):
+            ax = e.params.get("axis_name", e.params.get("axes", ()))
+            if not isinstance(ax, (tuple, list)):
+                ax = (ax,)
+            axes.update(a for a in ax if isinstance(a, str))
+    return axes
+
+# the steady-state SEGMENT: no pad, ghost exchange along the spatial
+# axis only, nothing along the lane axis
+jaxpr = jax.make_jaxpr(eng._segment_entry)(
+    eng._frames, eng._env_frames, r, it, done)
+seg = flatten_eqns(jaxpr.jaxpr, [])
+names = [e.primitive.name for e in seg]
+assert "pad" not in names, "re-framing pad in the composed segment"
+axes = collective_axes(seg)
+assert "model" in axes, axes
+assert "data" not in axes, ("cross-lane collective in segment", axes)
+
+# the per-slot REFILL: no pad, owner-masked writes at most one LOCAL
+# interior each, and again no lane-axis collective
+item = jnp.asarray(trip_items([3])[0])
+jaxpr = jax.make_jaxpr(eng._refill_impl)(
+    eng._frames, eng._env_frames, r, it, done,
+    jnp.asarray(0, jnp.int32), item)
+ref = flatten_eqns(jaxpr.jaxpr, [])
+names = [e.primitive.name for e in ref]
+assert "pad" not in names, "re-framing pad in the composed refill"
+axes = collective_axes(ref)
+assert "data" not in axes, ("cross-lane collective in refill", axes)
+spec = eng._lspec.local
+interior = spec.m * spec.n
+for e in ref:
+    if e.primitive.name == "dynamic_update_slice":
+        upd = e.invars[1].aval
+        assert int(np.prod(upd.shape)) <= interior, upd.shape
+print("OKJAXPR")
+""")
+        assert "OKJAXPR" in out
+
+    def test_continuous_prep_and_env_refill(self):
+        """Halo-aware prep + per-item env slots ride the composed
+        continuous refill: every item must match its solo run with ITS
+        OWN env (a slot keeping the previous occupant's env — or a
+        non-owner shard clobbering a live slot — would diverge)."""
+        out = run_multidevice(SHARDED_PRELUDE + """
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+part = GridPartition(mesh=mesh, axis_names=("model",), array_axes=(0,))
+
+def prep(item):
+    blur = (jnp.roll(item, 1, 0) + jnp.roll(item, -1, 0)
+            + jnp.roll(item, 1, 1) + jnp.roll(item, -1, 1) + item) / 5.0
+    return blur, (jnp.abs(item) > 1.0,)
+
+def restore(get, mask):
+    lap = get(-1,0)+get(1,0)+get(0,-1)+get(0,1)-4.0*get(0,0)
+    return get(0,0) + 0.1*lap
+
+def mkrestore(backend, part=None):
+    return LoopOfStencilReduce(
+        f=restore, k=1, combine="max", cond=lambda r: r < 2e-3,
+        delta=R.abs_delta, boundary="zero", max_iters=40,
+        backend=backend, partition=part, interpret=True, block=(16, 128))
+
+eng = FarmEngine(mkrestore("pallas-sharded", part), lanes=4, mesh=mesh,
+                 prep=prep, segment=6)
+outs = []
+n = eng.run(items, outs.append, continuous=True)
+assert n == len(items), n
+outs.sort(key=lambda r: r.index)
+jref = mkrestore("jnp")
+for it, res in zip(items, outs):
+    a0, envs = prep(jnp.asarray(it))
+    ref = jref.run(a0, env=envs)
+    assert int(res.iters) == int(ref.iters), (res.iters, ref.iters)
+    np.testing.assert_allclose(res.a, np.asarray(ref.a), atol=1e-5)
+print("OKPREPCONT")
+""")
+        assert "OKPREPCONT" in out
 
 
 class TestAutoUnroll:

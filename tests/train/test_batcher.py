@@ -30,6 +30,75 @@ def test_ragged_prompts_batched_and_answered(served, rng):
     for r in results:
         assert 1 <= len(r.tokens) <= 6
 
+def test_round_mode_honors_request_budgets(served, rng):
+    """Regression: round-mode `run_all` silently ignored
+    `Request.max_new_tokens` (only the continuous path honored it) —
+    per-request budgets must ride the done-mask in BOTH paths and yield
+    identical tokens (round-vs-continuous budget parity)."""
+    cfg, params = served
+    gcfg = GenerateConfig(max_new_tokens=9, eos_id=1, temperature=0.0)
+    budgets = [2, 9, 4, 1, 6]
+    prompts = [np.asarray(rng.integers(2, cfg.vocab_size, 6), np.int32)
+               for _ in budgets]
+
+    def mk():
+        b = Batcher(cfg, params, gcfg, max_batch=2,
+                    cache_dtype=jnp.float32)
+        for i, (p, bud) in enumerate(zip(prompts, budgets)):
+            b.submit(Request(rid=i, prompt=p, max_new_tokens=bud))
+        return b
+
+    round_res = {r.rid: r.tokens for r in mk().run_all()}
+    for rid, toks in round_res.items():
+        assert len(toks) <= budgets[rid], (rid, len(toks))
+    cont_res = {r.rid: r.tokens for r in mk().run_continuous()}
+    for rid in round_res:
+        np.testing.assert_array_equal(round_res[rid], cont_res[rid])
+
+    with pytest.raises(ValueError, match="budget"):
+        b = Batcher(cfg, params, gcfg, max_batch=2)
+        b.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=99))
+        b.run_all()
+
+
+class _CountingArray:
+    """Stands in for a device-resident array handed to `_drain`: counts
+    whole-array pulls and REFUSES element indexing (the regression —
+    `int(lengths[i])` in a Python loop is one blocking transfer per
+    request)."""
+
+    def __init__(self, arr):
+        self._arr = np.asarray(arr)
+        self.pulls = 0
+
+    def __array__(self, dtype=None, copy=None):
+        self.pulls += 1
+        return self._arr if dtype is None else self._arr.astype(dtype)
+
+    def __getitem__(self, i):
+        raise AssertionError(
+            "per-element device indexing in _drain — one blocking "
+            "transfer per request breaks the one-pull-per-batch "
+            "contract")
+
+
+def test_drain_pulls_each_batch_array_once(served, rng):
+    """The double-buffered drain must keep the one-transfer-per-batch
+    contract: ONE whole-array pull for the tokens and ONE for the
+    lengths, never a per-request element pull."""
+    cfg, params = served
+    gcfg = GenerateConfig(max_new_tokens=4, eos_id=1, temperature=0.0)
+    b = Batcher(cfg, params, gcfg, max_batch=3)
+    batch = [Request(rid=i, prompt=np.asarray(
+        rng.integers(2, cfg.vocab_size, 5), np.int32)) for i in range(3)]
+    gen = np.asarray(rng.integers(2, cfg.vocab_size, (3, 4)), np.int32)
+    lengths = _CountingArray(np.asarray([2, 4, 1], np.int32))
+    out = []
+    b._drain((batch, gen, lengths), out)
+    assert lengths.pulls == 1, lengths.pulls
+    assert [len(r.tokens) for r in out] == [2, 4, 1]
+
+
 def test_batched_equals_solo_greedy(served, rng):
     """A request's greedy continuation is the same whether it is served
     alone or inside a batch."""

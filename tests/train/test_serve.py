@@ -160,10 +160,135 @@ class TestContinuousBatching:
         with pytest.raises(ValueError, match="budget"):
             eng.run([Request(rid=0, prompt=prompt, max_new_tokens=0)],
                     lambda rid, toks: None)
-        with pytest.raises(ValueError, match="prompt"):
-            eng.run([Request(rid=0, prompt=prompt),
-                     Request(rid=1, prompt=prompt[:2])],
-                    lambda rid, toks: None)
+        # ragged prompts are admitted into ONE pool now; only a prompt
+        # LONGER than the bound slot width is rejected
+        eng2 = ContinuousEngine(cfg, params, gcfg, slots=2,
+                                cache_dtype=jnp.float32,
+                                max_prompt_len=4)
+        with pytest.raises(ValueError, match="max_prompt_len"):
+            eng2.run([Request(rid=0, prompt=np.concatenate(
+                [prompt, prompt]))], lambda rid, toks: None)
+        # ragged + SSM has no pad-masking path: loud error, and the
+        # Batcher falls back to exact-length grouping automatically
+        mamba = get_reduced("mamba2-130m")
+        eng3 = ContinuousEngine(mamba, None, gcfg, slots=2,
+                                cache_dtype=jnp.float32)
+        with pytest.raises(ValueError, match="attention-only"):
+            eng3.run([Request(rid=0, prompt=prompt),
+                      Request(rid=1, prompt=prompt[:2])],
+                     lambda rid, toks: None)
+
+
+class TestRaggedContinuous:
+    """Ragged-prompt admission into ONE slot pool: the whole queue
+    drains through a single `ContinuousEngine` binding at the max
+    prompt length (padded per-slot prefill + prompt-length mask), with
+    mid-batch completion-order emission, solo-generate parity (the
+    no-pad-leak oracle: outputs influenced by a pad would diverge), and
+    `idle_slot_steps` strictly below the exact-length-grouped
+    baseline."""
+
+    @pytest.fixture(scope="class")
+    def served(self):
+        cfg = get_reduced("qwen3-1.7b")
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        return cfg, params
+
+    @staticmethod
+    def _submit(b, cfg, rng, lens, budgets):
+        prompts = [np.asarray(rng.integers(2, cfg.vocab_size, L),
+                              np.int32) for L in lens]
+        for i, (p, bud) in enumerate(zip(prompts, budgets)):
+            b.submit(Request(rid=i, prompt=p, max_new_tokens=bud))
+        return prompts
+
+    def test_single_binding_parity_and_idle_drop(self, served, rng):
+        cfg, params = served
+        gcfg = GenerateConfig(max_new_tokens=10, eos_id=1,
+                              temperature=0.0)
+        lens = [4, 7, 4, 7, 4]
+        budgets = [2, 8, 2, 8, 3]
+        rng0 = np.random.default_rng(0)
+        b = Batcher(cfg, params, gcfg, max_batch=2,
+                    cache_dtype=jnp.float32)
+        prompts = self._submit(b, cfg, rng0, lens, budgets)
+        results = b.run_continuous()
+        assert len(b.engines) == 1, "must be ONE engine binding"
+        assert sorted(r.rid for r in results) == list(range(5))
+
+        # solo-generate parity: the reused slot and the padded prefill
+        # leak nothing (values AND lengths)
+        for r in results:
+            g = GenerateConfig(max_new_tokens=budgets[r.rid], eos_id=1,
+                               temperature=0.0)
+            solo, L, _ = generate(cfg, params,
+                                  jnp.asarray(prompts[r.rid][None]), g,
+                                  cache_dtype=jnp.float32)
+            np.testing.assert_array_equal(
+                r.tokens, np.asarray(solo[0, :int(L[0])]))
+
+        # mid-batch emission: rid 0 (budget 2) beats rid 1 (budget 8)
+        # out of the initial cohort despite their different lengths
+        pos = {r.rid: k for k, r in enumerate(results)}
+        assert pos[0] < pos[1]
+        eng = b.engines[0]
+        assert eng.stats["segment_traces"] == 1
+        assert eng.stats["prefill_traces"] == 1
+        assert eng.stats["prefills"] == 5
+        idle_single = eng.stats["idle_slot_steps"]
+
+        # exact-length-grouped baseline: same queue, one engine per
+        # length group — each group idles its cohort at the group tail
+        b2 = Batcher(cfg, params, gcfg, max_batch=2,
+                     cache_dtype=jnp.float32)
+        self._submit(b2, cfg, np.random.default_rng(0), lens, budgets)
+        results2 = b2.run_continuous(exact_groups=True)
+        assert len(b2.engines) == 2
+        assert sorted(r.rid for r in results2) == list(range(5))
+        idle_grouped = sum(e.stats["idle_slot_steps"]
+                           for e in b2.engines)
+        assert idle_single < idle_grouped, (idle_single, idle_grouped)
+
+    def test_ring_cache_ragged(self, rng):
+        """Sliding-window (ring-buffer KV) layers under RAGGED padded
+        prefill: each sequence keeps its own last min(W, len) real keys
+        (pads map to a dropped slot) — parity vs solo generate on
+        gemma2 with prompts straddling the window."""
+        cfg = get_reduced("gemma2-9b")
+        assert cfg.sliding_window, "arch must carry ring layers"
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        gcfg = GenerateConfig(max_new_tokens=7, eos_id=1,
+                              temperature=0.0)
+        W = cfg.sliding_window
+        lens = [3, W + 1, 5, W + 4, 4]       # short of and past the ring
+        budgets = [2, 7, 3, 7, 4]
+        b = Batcher(cfg, params, gcfg, max_batch=2,
+                    cache_dtype=jnp.float32)
+        prompts = self._submit(b, cfg, rng, lens, budgets)
+        results = b.run_continuous()
+        assert len(b.engines) == 1
+        assert sorted(r.rid for r in results) == list(range(5))
+        for r in results:
+            g = GenerateConfig(max_new_tokens=budgets[r.rid], eos_id=1,
+                               temperature=0.0)
+            solo, L, _ = generate(cfg, params,
+                                  jnp.asarray(prompts[r.rid][None]), g,
+                                  cache_dtype=jnp.float32)
+            np.testing.assert_array_equal(
+                r.tokens, np.asarray(solo[0, :int(L[0])]))
+
+    def test_ssm_arch_falls_back_to_exact_groups(self, rng):
+        cfg = get_reduced("mamba2-130m")
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        gcfg = GenerateConfig(max_new_tokens=4, eos_id=1,
+                              temperature=0.0)
+        b = Batcher(cfg, params, gcfg, max_batch=2,
+                    cache_dtype=jnp.float32)
+        self._submit(b, cfg, rng, [4, 6, 4], [3, 3, 3])
+        results = b.run_continuous()
+        assert sorted(r.rid for r in results) == [0, 1, 2]
+        assert len(b.engines) == 2, \
+            "SSM archs must keep exact-length grouping"
 
 
 def test_temperature_sampling_is_reproducible(rng):
