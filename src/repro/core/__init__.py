@@ -13,13 +13,14 @@ Public API:
 from .semantics import Boundary
 from .stencil import TapAccessor, stencil_taps, stencil_windows, conv_taps
 from .reduce import (tree_reduce, two_phase_reduce, collective_combine,
-                     MONOIDS)
+                     MONOIDS, Sentinel, health_status)
 from .pattern import (LoopOfStencilReduce, LoopResult, loop_of_stencil_reduce,
                       loop_of_stencil_reduce_d, loop_of_stencil_reduce_s)
 from .halo import (GridPartition, exchange_halo,
                    distributed_loop_of_stencil_reduce)
 from .streaming import (pipe, farm, ofarm, sharded_farm, StreamRunner,
-                        FarmEngine, StreamResult)
+                        FarmEngine, StreamResult, NonFiniteItemError,
+                        item_status)
 
 __all__ = [
     "Boundary", "TapAccessor", "stencil_taps", "stencil_windows",
@@ -29,4 +30,5 @@ __all__ = [
     "loop_of_stencil_reduce_s", "GridPartition", "exchange_halo",
     "distributed_loop_of_stencil_reduce", "pipe", "farm", "ofarm",
     "sharded_farm", "StreamRunner", "FarmEngine", "StreamResult",
+    "Sentinel", "health_status", "NonFiniteItemError", "item_status",
 ]

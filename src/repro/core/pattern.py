@@ -46,7 +46,8 @@ import jax
 import jax.numpy as jnp
 
 from .executor import BACKENDS
-from .reduce import resolve_monoid, tree_reduce
+from .reduce import (HEALTH_STALL_MASK, health_update, resolve_monoid,
+                     tree_reduce)
 from .semantics import Boundary
 from .stencil import stencil_taps, stencil_windows, stencil_indexed
 
@@ -113,6 +114,8 @@ class LoopResult:
     reduced: jnp.ndarray   # last /⊕ value (what the condition saw)
     iters: jnp.ndarray     # number of stencil iterations executed
     state: Any = None      # final loop state (-s variant), None otherwise
+    health: Any = None     # packed per-lane health word(s) — decode with
+                           # repro.core.reduce.health_status
 
 
 @dataclasses.dataclass
@@ -165,6 +168,21 @@ class LoopOfStencilReduce:
     block:    Pallas tile shape (clipped to the rounded domain).
     interpret: force Pallas interpret mode (None = auto: interpret
               everywhere but TPU).
+    sentinel: a :class:`repro.core.reduce.Sentinel` health policy, or
+              None (the default — only the CONVERGED bit is tracked).
+              The sentinel reads the SAME fused reduce value the
+              condition sees (zero extra passes): a lane whose reduce
+              goes NaN/Inf (``nan=True``) or fails to decrease for
+              ``patience`` consecutive checks is QUARANTINED — masked
+              done immediately so it stops spinning (and, in the
+              composed deployment, stops feeding the step-aligned ghost
+              exchange).  Decode the per-lane outcome from
+              ``LoopResult.health`` with :func:`repro.core.reduce.
+              health_status`.
+    fault_hook: deterministic fault-injection seam (lane paths only):
+              ``hook(r, it) -> r`` intercepts the (lanes,) reduce vector
+              after each check — see :mod:`repro.resilience.faults`.
+              Production deployments leave it None.
     """
 
     f: Callable
@@ -184,6 +202,8 @@ class LoopOfStencilReduce:
     partition: Optional[Any] = None
     block: tuple = (256, 256)
     interpret: Optional[bool] = None
+    sentinel: Optional[Any] = None
+    fault_hook: Optional[Callable] = None
 
     def __post_init__(self):
         self._op, self._id = resolve_monoid(self.combine, self.identity)
@@ -204,6 +224,12 @@ class LoopOfStencilReduce:
             raise ValueError(
                 f"unroll must be a positive int or 'auto'; "
                 f"got {self.unroll!r}")
+        if self.sentinel is not None and not (
+                0 <= self.sentinel.patience <= HEALTH_STALL_MASK):
+            raise ValueError(
+                f"sentinel patience {self.sentinel.patience} outside "
+                f"[0, {HEALTH_STALL_MASK}] (the health word's stall "
+                "counter width)")
 
     # -- single stencil application ------------------------------------
     def _apply(self, a, env=()):
@@ -358,15 +384,18 @@ class LoopOfStencilReduce:
                 step=lambda fr: eng.sweeps(fr, env_frames, sspec),
                 state_view=lambda fr: eng.unframe(fr, sspec),
                 finalize=lambda fr: eng.unframe(fr, sspec))
-            return res.a, res.reduced, res.iters
+            return res.a, res.reduced, res.iters, res.health
 
         from jax.sharding import PartitionSpec as P
         pspec = part.pspec
+        # reduced/iters/health are shard-invariant (the collective
+        # combine hands every shard the identical reduce value, so the
+        # sentinel folds identically everywhere)
         fn = shard_map(local_run, mesh=part.mesh,
                        in_specs=(pspec,) * (1 + len(env)),
-                       out_specs=(pspec, P(), P()))
-        a, r, it = fn(a0, *env)
-        return LoopResult(a=a, reduced=r, iters=it, state=None)
+                       out_specs=(pspec, P(), P(), P()))
+        a, r, it, hw = fn(a0, *env)
+        return LoopResult(a=a, reduced=r, iters=it, state=None, health=hw)
 
     # -- the lane-stacked loop (1:1 streaming farm) ----------------------
     def farm_run(self, a0, *, env=(), done0=None) -> LoopResult:
@@ -439,9 +468,13 @@ class LoopOfStencilReduce:
 
     def _lane_body(self, step, lanes: int):
         """The shared done-masked lane body: one ``step`` over the stacked
-        carry with per-lane freeze.  ``carry = (a, r, it, done)``; a lane
-        whose flag (or iteration cap) has fired keeps its slice frozen
-        while the others run on."""
+        carry with per-lane freeze.  ``carry = (a, r, it, done, hw)``; a
+        lane whose flag (or iteration cap) has fired keeps its slice
+        frozen while the others run on.  ``hw`` is the packed per-lane
+        health word the sentinel maintains on the reduce value the
+        condition already computes — a POISONED or DIVERGED lane is
+        masked done on the spot (quarantined) instead of spinning to the
+        iteration cap or feeding further exchanges."""
 
         def lane_where(live, old, new):
             return jax.tree.map(
@@ -450,23 +483,30 @@ class LoopOfStencilReduce:
                 old, new)
 
         def body(carry):
-            a, r, it, done = carry
+            a, r, it, done, hw = carry
             live = jnp.logical_and(~done, it < self.max_iters)
             a_new, r_new = step(a)
+            if self.fault_hook is not None:
+                r_new = self.fault_hook(r_new, it)
             done_new = jax.vmap(self._cond_value, in_axes=(0, None))(
                 r_new, None)
+            hw_new, quar = health_update(hw, r_new, r, live, done_new,
+                                         it, self.sentinel)
+            retire = jnp.logical_or(done_new, quar)
             return (lane_where(live, a, a_new),
                     jnp.where(live, r_new, r),
                     jnp.where(live, it + self.unroll, it),
-                    jnp.where(live, jnp.logical_or(done, done_new), done))
+                    jnp.where(live, jnp.logical_or(done, retire), done),
+                    jnp.where(live, hw_new, hw))
 
         return body
 
     def _lane_finished(self, carry):
         """Per-lane 'this lane needs the dispatcher' mask: condition fired
         OR iteration cap hit (a capped lane will never fire its flag, so
-        the continuous dispatcher must retire it like a converged one)."""
-        _, _, it, done = carry
+        the continuous dispatcher must retire it like a converged one).
+        Quarantined lanes arrive here already done-masked."""
+        it, done = carry[2], carry[3]
         return jnp.logical_or(done, it >= self.max_iters)
 
     def _drive_lanes(self, a0, *, step, finalize, done0=None,
@@ -492,16 +532,18 @@ class LoopOfStencilReduce:
         it0 = jnp.zeros((lanes,), jnp.int32)
         d0 = (jnp.zeros((lanes,), bool) if done0 is None
               else jnp.asarray(done0, bool).reshape((lanes,)))
+        hw0 = jnp.zeros((lanes,), jnp.int32)
         body = self._lane_body(step, lanes)
 
         def cond_fun(carry):
-            _, _, it, done = carry
+            it, done = carry[2], carry[3]
             live = jnp.any(jnp.logical_and(~done, it < self.max_iters))
             return live if cond_fold is None else cond_fold(live)
 
-        a, r, it, _ = jax.lax.while_loop(cond_fun, body,
-                                         (a0, r0, it0, d0))
-        return LoopResult(a=finalize(a), reduced=r, iters=it, state=None)
+        a, r, it, _, hw = jax.lax.while_loop(cond_fun, body,
+                                             (a0, r0, it0, d0, hw0))
+        return LoopResult(a=finalize(a), reduced=r, iters=it, state=None,
+                          health=hw)
 
     def lane_segment(self, carry, *, step, segment: int,
                      early_exit: bool = True):
@@ -511,7 +553,7 @@ class LoopOfStencilReduce:
         control back to the dispatcher as soon as any lane *newly*
         finishes (condition fired or iteration cap hit), after at most
         ``segment`` body steps, or immediately when no live lane remains.
-        ``carry = (a, r, it, done)`` round-trips unchanged in shape, so a
+        ``carry = (a, r, it, done, hw)`` round-trips unchanged in shape, so a
         streaming executor resumes the SAME carry after refilling only
         the finished lanes' slots in place — one compilation serves every
         segment of the stream.  Returns ``(carry', steps)`` with
@@ -537,21 +579,25 @@ class LoopOfStencilReduce:
         every backend vmap/farm safe."""
 
         def body(carry):
-            a, r, it, s, done = carry
+            a, r, it, s, done, hw = carry
             a_new, r_new = step(a)
             it_new = it + self.unroll
             s_new = (self.state_update(s, state_view(a_new), it_new)
                      if self.state_update is not None else s)
             done_new = self._cond_value(r_new, s_new)
+            hw_new, quar = health_update(hw, r_new, r, ~done, done_new,
+                                         it, self.sentinel)
             # done-masking => vmap/farm safe
             keep = lambda old, new: jax.tree.map(
                 lambda o, n: jnp.where(done, o, n), old, new)
             return (keep(a, a_new), jnp.where(done, r, r_new),
                     jnp.where(done, it, it_new), keep(s, s_new),
-                    jnp.logical_or(done, done_new))
+                    jnp.logical_or(done,
+                                   jnp.logical_or(done_new, quar)),
+                    jnp.where(done, hw, hw_new))
 
         def cond_fun(carry):
-            _, _, it, _, done = carry
+            _, _, it, _, done, _ = carry
             return jnp.logical_and(~done, it < self.max_iters)
 
         # identity element typed like the actual reduce output so the
@@ -559,9 +605,10 @@ class LoopOfStencilReduce:
         r_shape = jax.eval_shape(lambda a: step(a)[1], a0)
         r0 = jnp.asarray(self._id, dtype=r_shape.dtype)
         carry0 = (a0, r0, jnp.asarray(0, jnp.int32), state0,
-                  jnp.asarray(False))
-        a, r, it, s, _ = jax.lax.while_loop(cond_fun, body, carry0)
-        return LoopResult(a=finalize(a), reduced=r, iters=it, state=s)
+                  jnp.asarray(False), jnp.asarray(0, jnp.int32))
+        a, r, it, s, _, hw = jax.lax.while_loop(cond_fun, body, carry0)
+        return LoopResult(a=finalize(a), reduced=r, iters=it, state=s,
+                          health=hw)
 
     # convenience: a jitted runner
     def jit_run(self, donate: bool = True):

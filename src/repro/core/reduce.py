@@ -10,6 +10,7 @@ device (stronger than the paper's host-side final reduce).
 """
 from __future__ import annotations
 
+import dataclasses
 import operator
 from typing import Callable
 
@@ -70,6 +71,104 @@ def collective_combine(op: Callable, r: jnp.ndarray,
         else:
             r = lax.psum(r, name)
     return r
+
+
+# ---------------------------------------------------------------------------
+# Convergence sentinels — the per-lane health word.
+#
+# The fused delta-reduce already computes one scalar per lane per sweep to
+# drive the convergence condition; the sentinel reads THAT value (zero
+# extra passes over the grid) and folds what it sees into a packed int32
+# health word carried alongside (r, it, done):
+#
+#     bits 0..15   stall counter — consecutive sweeps whose reduce value
+#                  failed to decrease (the divergence detector's memory)
+#     bit  16      CONVERGED — the condition c fired for this lane
+#     bit  17      POISONED — the reduce value went NaN/Inf
+#     bit  18      DIVERGED — the stall counter hit the sentinel patience
+#
+# POISONED/DIVERGED quarantine the lane: the driver masks it done so it
+# stops spinning (and, in the composed deployment, stops feeding the
+# step-aligned ghost exchange with sweeps nobody needs).  A lane that
+# hits max_iters with neither CONVERGED nor a fault bit reads as
+# nonconverged — budget exhaustion needs no bit of its own.
+# ---------------------------------------------------------------------------
+
+HEALTH_STALL_MASK = (1 << 16) - 1
+HEALTH_CONVERGED = 1 << 16
+HEALTH_POISONED = 1 << 17
+HEALTH_DIVERGED = 1 << 18
+
+STATUS_OK = "ok"
+STATUS_NONCONVERGED = "nonconverged"
+STATUS_POISONED = "poisoned"
+
+
+@dataclasses.dataclass(frozen=True)
+class Sentinel:
+    """Per-lane health policy riding the fused reduce.
+
+    ``nan``       — poison a lane whose reduce value goes non-finite
+                    (float reduce dtypes only; a bool/any-monoid reduce
+                    has nothing to poison).
+    ``patience``  — quarantine a lane whose reduce value has not
+                    DECREASED for this many consecutive condition checks
+                    (0 disables the divergence detector; leave it off
+                    for oscillating but convergent measures).
+    """
+    nan: bool = True
+    patience: int = 0
+
+
+def health_update(hw, r_new, r_prev, live, converged, it, sentinel):
+    """One sentinel step: fold this check's reduce value into the packed
+    per-lane health words.  All inputs are (lanes,) vectors except
+    ``sentinel`` (static) — jit/vmap/shard_map-safe, no collectives.
+
+    Returns ``(hw', quarantine)`` where ``quarantine`` marks lanes the
+    driver must mask done NOW (poisoned or diverged) — distinct from
+    CONVERGED, which the driver's own done-mask already handles.
+    """
+    hw = jnp.asarray(hw, jnp.int32)
+    stall = jnp.bitwise_and(hw, HEALTH_STALL_MASK)
+    flags = hw - stall
+    floatlike = jnp.issubdtype(jnp.asarray(r_new).dtype, jnp.floating)
+    if sentinel is not None and sentinel.nan and floatlike:
+        poison = jnp.logical_and(live, ~jnp.isfinite(r_new))
+    else:
+        poison = jnp.zeros(hw.shape, bool)
+    if sentinel is not None and sentinel.patience > 0 and floatlike:
+        # "non-decreasing" against the previous CHECK's value; the first
+        # check compares against the identity element, which is not a
+        # real iterate — let it pass
+        stalled = jnp.logical_and(live,
+                                  jnp.logical_and(it > 0, r_new >= r_prev))
+        stall = jnp.where(live, jnp.where(stalled, stall + 1, 0), stall)
+        diverged = stall >= sentinel.patience
+    else:
+        diverged = jnp.zeros(hw.shape, bool)
+    flags = jnp.where(jnp.logical_and(live, converged),
+                      jnp.bitwise_or(flags, HEALTH_CONVERGED), flags)
+    flags = jnp.where(poison, jnp.bitwise_or(flags, HEALTH_POISONED),
+                      flags)
+    flags = jnp.where(diverged, jnp.bitwise_or(flags, HEALTH_DIVERGED),
+                      flags)
+    quarantine = jnp.logical_and(live, jnp.logical_or(poison, diverged))
+    return jnp.bitwise_or(flags, stall), quarantine
+
+
+def health_status(hw) -> str:
+    """Host-side status taxonomy of one packed health word.  Poison wins
+    over everything (a NaN result is never 'ok' however the condition
+    read it); a clean CONVERGED bit is the only path to 'ok'."""
+    hw = int(hw)
+    if hw & HEALTH_POISONED:
+        return STATUS_POISONED
+    if hw & HEALTH_DIVERGED:
+        return STATUS_NONCONVERGED
+    if hw & HEALTH_CONVERGED:
+        return STATUS_OK
+    return STATUS_NONCONVERGED
 
 
 def tree_reduce(op: Callable, a: jnp.ndarray, identity) -> jnp.ndarray:

@@ -60,6 +60,30 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .reduce import HEALTH_CONVERGED, HEALTH_DIVERGED, HEALTH_POISONED
+
+
+class NonFiniteItemError(ValueError):
+    """A stream item carried NaN/Inf leaves at the prep boundary.  Round
+    mode raises it (loudly, at admission — not as an opaque NaN cascade
+    ten sweeps downstream); continuous mode routes the item to the
+    dead-letter list with ``status="rejected"`` and keeps streaming."""
+
+
+def item_status(hw: int, iters: int, max_iters: int) -> str:
+    """The streaming status taxonomy of one finished item, from its
+    packed health word + trip count: ``ok`` (condition fired, no fault),
+    ``poisoned`` (NaN/Inf reduce), ``nonconverged`` (sentinel divergence
+    quarantine), ``timed_out`` (iteration budget exhausted)."""
+    hw = int(hw)
+    if hw & HEALTH_POISONED:
+        return "poisoned"
+    if hw & HEALTH_DIVERGED:
+        return "nonconverged"
+    if hw & HEALTH_CONVERGED:
+        return "ok"
+    return "timed_out" if int(iters) >= max_iters else "nonconverged"
+
 
 def pipe(*stages: Callable) -> Callable:
     """pipe(a, b, ...) — functional composition b∘a, per stream item."""
@@ -222,11 +246,18 @@ class StreamResult:
     fields of :class:`~repro.core.pattern.LoopResult`.  Continuous farms
     emit in COMPLETION order (that is the point — a 1-sweep item must not
     wait behind a 200-sweep straggler), so the index carries the ofarm
-    identity the positional contract used to."""
+    identity the positional contract used to.
+
+    ``status`` is the failure-semantics verdict (see :func:`item_status`
+    plus ``"rejected"`` for items that failed the admission-time finite
+    check); ``attempts`` counts slot occupations (> 1 means the item was
+    retried on a fresh slot after a non-ok finish)."""
     index: int
     a: Any
     reduced: Any
     iters: Any
+    status: str = "ok"
+    attempts: int = 1
 
 
 @dataclasses.dataclass
@@ -299,6 +330,17 @@ class FarmEngine:
     lane_axis: str = "data"
     segment: int = 16                  # continuous mode: max body steps
                                        # between dispatcher check-ins
+    max_attempts: int = 1              # slot occupations per item: a
+                                       # non-ok item re-enters the retry
+                                       # queue (fresh slot) until this
+                                       # cap, then dead-letters
+    slot_patience: int = 3             # consecutive non-ok finishes on
+                                       # one slot before the slot itself
+                                       # is quarantined (retired from
+                                       # the refill rotation)
+    check_finite: bool = True          # admission-time NaN/Inf guard on
+                                       # every item leaf (host-side
+                                       # O(item) scan)
 
     def __post_init__(self):
         loop = self.loop
@@ -336,6 +378,15 @@ class FarmEngine:
                         f"axes {self.mesh.axis_names}")
         if self.segment < 1:
             raise ValueError(f"segment must be >= 1; got {self.segment}")
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1; got {self.max_attempts}")
+        if self.slot_patience < 1:
+            raise ValueError(
+                f"slot_patience must be >= 1; got {self.slot_patience}")
+        self.dead_letter: list = []     # items that exhausted retries /
+                                        # were rejected at admission
+                                        # (their emitted StreamResults)
         self._prep1 = self.prep or _default_prep
         self._vprep = jax.vmap(self._prep1)
         self._bound = False
@@ -348,16 +399,19 @@ class FarmEngine:
         # so refills update them in place
         self._round_fn = jax.jit(self._round_impl, donate_argnums=(0, 1))
         self._segment_fn = jax.jit(self._segment_entry,
-                                   donate_argnums=(0, 1, 2, 3, 4))
+                                   donate_argnums=(0, 1, 2, 3, 4, 5))
         self._refill_fn = jax.jit(self._refill_impl,
-                                  donate_argnums=(0, 1, 2, 3, 4))
+                                  donate_argnums=(0, 1, 2, 3, 4, 5))
         self._extract_fn = jax.jit(self._extract_impl)
-        self._waste_buf: list = []      # (waste, iters) device pairs,
-                                        # converted lazily (no sync in
-                                        # the double-buffered hot path)
+        self._waste_buf: list = []      # (waste, iters, hw, count)
+                                        # device tuples, converted
+                                        # lazily (no sync in the
+                                        # double-buffered hot path)
         self.stats = {"items": 0, "rounds": 0, "h2d_bytes": 0,
                       "d2h_bytes": 0, "segments": 0, "refills": 0,
                       "lane_steps": 0, "wasted_lane_steps": 0,
+                      "quarantined_lane_steps": 0, "retries": 0,
+                      "rejected": 0, "quarantined_slots": 0,
                       "segment_traces": 0, "refill_traces": 0}
 
     # -- static geometry (first item binds the shapes) -------------------
@@ -481,7 +535,8 @@ class FarmEngine:
             in_specs=(fr_spec, env_specs, data_spec,
                       tuple(data_spec for _ in envs), P(self.lane_axis)),
             out_specs=(fr_spec, env_specs, data_spec, P(self.lane_axis),
-                       P(self.lane_axis), P(self.lane_axis)))
+                       P(self.lane_axis), P(self.lane_axis),
+                       P(self.lane_axis)))
         return fn(frames, env_frames, a0s, envs, active)
 
     @staticmethod
@@ -524,13 +579,13 @@ class FarmEngine:
         """The device-side round (directly, or per-shard inside
         shard_map): in-place slot refill → ONE done-masked lane
         while_loop → O(interior) result slices.  Returns
-        (frames', env_frames', outs, reduced, iters, waste)."""
+        (frames', env_frames', outs, reduced, iters, health, waste)."""
         loop = self._loop
         done0 = jnp.logical_not(active)
         if loop.backend == "jnp":
             res = loop.farm_run(interiors, env=envs, done0=done0)
             return (frames, env_frames, res.a, res.reduced, res.iters,
-                    self._round_waste(res.iters))
+                    res.health, self._round_waste(res.iters))
         eng, lspec = self._eng, self._lspec
         frames, env_frames = eng.refill_lanes(frames, env_frames,
                                               interiors, envs, lspec)
@@ -542,7 +597,8 @@ class FarmEngine:
         outs = eng.unframe_lanes(res.a, lspec)
         waste = (self._round_waste(res.iters) if fold is None
                  else self._round_waste_composed(res.iters))
-        return (res.a, env_frames, outs, res.reduced, res.iters, waste)
+        return (res.a, env_frames, outs, res.reduced, res.iters,
+                res.health, waste)
 
     def round(self, items, count: Optional[int] = None):
         """Push one stacked (≤ lanes, ...) batch through the slots.
@@ -551,10 +607,11 @@ class FarmEngine:
         tuple stream items ``(a, *env)`` — a TUPLE of per-leaf stacks
         (stack each leaf across the batch; a tuple argument is always
         read this way, so pass a list, not a tuple, of items).
-        Returns per-item ``(a, reduced, iters)`` stacks of length
-        ``count`` (short batches are padded to the lane count on the
-        host and masked out on device — the shapes, and therefore the
-        compilation, never change).
+        Returns per-item ``(a, reduced, iters, health)`` stacks of
+        length ``count`` (short batches are padded to the lane count on
+        the host and masked out on device — the shapes, and therefore
+        the compilation, never change).  Decode ``health`` with
+        :func:`repro.core.reduce.health_status`.
         """
         if isinstance(items, list):
             items = _stack_items(items)
@@ -584,6 +641,20 @@ class FarmEngine:
             self._bind(rep)
         else:
             self._check_item(_as_item(rep))
+        if self.check_finite:
+            # the drift check above reads only the representative item;
+            # the finite guard must sweep the WHOLE stack — round mode
+            # has no per-slot quarantine to catch a poisoned lane later
+            for i, leaf in enumerate(leaves):
+                if np.issubdtype(leaf.dtype, np.floating) \
+                        and not np.isfinite(leaf[:count]).all():
+                    which = ("stream batch" if i == 0
+                             else f"env stream batch (leaf {i - 1})")
+                    raise NonFiniteItemError(
+                        f"{which} carries NaN/Inf input values — "
+                        "rejected at the prep boundary before any lane "
+                        "is dirtied (pass check_finite=False to admit "
+                        "it anyway under sentinel quarantine)")
         # payload accounting, symmetric with _drain's d2h: the zero
         # lanes padding a ragged round are implementation overhead, not
         # per-item traffic
@@ -602,28 +673,38 @@ class FarmEngine:
             active = jnp.asarray(np.arange(self.lanes) < count)
         self.stats["rounds"] += 1
         self.stats["items"] += count
-        (self._frames, self._env_frames, outs, red, iters,
+        (self._frames, self._env_frames, outs, red, iters, hw,
          waste) = self._round_fn(
             self._frames, self._env_frames,
             jax.tree.map(jnp.asarray, items), active)
-        self._waste_buf.append((waste, iters))   # converted lazily
+        self._waste_buf.append((waste, iters, hw, count))  # lazy convert
         if len(self._waste_buf) > 64:            # bound the buffer on
             self._flush_waste(keep=2)            # long streams; the old
                                                  # rounds are long done
-        return outs[:count], red[:count], iters[:count]
+        return outs[:count], red[:count], iters[:count], hw[:count]
 
     # -- lane-step/waste accounting shared by both modes -----------------
     def _flush_waste(self, keep: int = 0):
-        """Fold buffered per-round (waste, iters) device pairs into the
-        stats — deferred so ``round()`` never forces a host sync inside
-        the double-buffered stream.  ``keep`` leaves the newest entries
-        buffered (their rounds may still be in flight)."""
+        """Fold buffered per-round (waste, iters, health, count) device
+        tuples into the stats — deferred so ``round()`` never forces a
+        host sync inside the double-buffered stream.  ``keep`` leaves
+        the newest entries buffered (their rounds may still be in
+        flight).  A non-ok lane's sweeps are additionally booked as
+        ``quarantined_lane_steps`` — work burned on an item that never
+        produced a usable result (the waste axis the fault plan's
+        round-vs-continuous comparison reads)."""
         while len(self._waste_buf) > keep:
-            waste, iters = self._waste_buf.pop(0)
+            waste, iters, hw, count = self._waste_buf.pop(0)
             w = int(np.asarray(waste).sum())
-            u = int(np.asarray(iters).sum())
+            it_h = np.asarray(iters)
+            hw_h = np.asarray(hw)
+            u = int(it_h.sum())
             self.stats["wasted_lane_steps"] += w
             self.stats["lane_steps"] += w + u
+            for i in range(count):
+                if item_status(hw_h[i], it_h[i],
+                               self._loop.max_iters) != "ok":
+                    self.stats["quarantined_lane_steps"] += int(it_h[i])
 
     @property
     def wasted_lane_steps(self) -> int:
@@ -638,6 +719,14 @@ class FarmEngine:
         self._flush_waste()
         return self.stats["lane_steps"]
 
+    @property
+    def quarantined_lane_steps(self) -> int:
+        """Lane sweeps burned on occupants that finished non-ok
+        (poisoned / diverged / timed out) — the fault-waste axis next
+        to ``wasted_lane_steps``."""
+        self._flush_waste()
+        return self.stats["quarantined_lane_steps"]
+
     # -- continuous mode: segmented loop + per-slot refill ---------------
     def _lane_step(self, env_frames):
         """The per-body-step farm advance for the resident carry: the
@@ -650,7 +739,7 @@ class FarmEngine:
         return lambda fr: self._eng.sweeps_lanes(fr, env_frames,
                                                  self._lspec)
 
-    def _local_segment(self, frames, env_frames, r, it, done):
+    def _local_segment(self, frames, env_frames, r, it, done, hw):
         """One bounded early-exit slice of the resident lane loop
         (directly, or per-shard inside shard_map).  Returns the resumed
         carry plus the (1,) body-step count — per shard, because lane
@@ -663,16 +752,17 @@ class FarmEngine:
         keeps every shard's collective schedule aligned with still no
         collective crossing the lane axis."""
         loop = self._loop
-        (a, r, it, done), steps = loop.lane_segment(
-            (frames, r, it, done), step=self._lane_step(env_frames),
+        (a, r, it, done, hw), steps = loop.lane_segment(
+            (frames, r, it, done, hw), step=self._lane_step(env_frames),
             segment=self.segment,
             early_exit=loop.backend != "pallas-sharded")
-        return a, env_frames, r, it, done, steps[None]
+        return a, env_frames, r, it, done, hw, steps[None]
 
-    def _segment_entry(self, frames, env_frames, r, it, done):
+    def _segment_entry(self, frames, env_frames, r, it, done, hw):
         self.stats["segment_traces"] += 1      # traced once per stream
         if self.mesh is None:
-            return self._local_segment(frames, env_frames, r, it, done)
+            return self._local_segment(frames, env_frames, r, it, done,
+                                       hw)
         from repro.sharding.specs import shard_map
 
         lane_spec = P(self.lane_axis)
@@ -687,16 +777,19 @@ class FarmEngine:
         fn = shard_map(
             self._local_segment, mesh=self.mesh,
             in_specs=(fr_spec, env_specs, lane_spec, lane_spec,
-                      lane_spec),
+                      lane_spec, lane_spec),
             out_specs=(fr_spec, env_specs, lane_spec, lane_spec,
-                       lane_spec, lane_spec))
-        return fn(frames, env_frames, r, it, done)
+                       lane_spec, lane_spec, lane_spec))
+        return fn(frames, env_frames, r, it, done, hw)
 
-    def _refill_impl(self, frames, env_frames, r, it, done, idx, item):
+    def _refill_impl(self, frames, env_frames, r, it, done, hw, idx,
+                     item):
         """Hand ONE finished lane's slot (dynamic index) to the next
         stream item and re-arm its carry — O(interior) writes, no pad,
         no re-framing, one compilation for every refill.  ``prep`` runs
-        here, on the whole item (halo-aware by construction)."""
+        here, on the whole item (halo-aware by construction).  The
+        health word re-arms to 0 with the rest of the carry: a slot's
+        faults do not follow it onto the next occupant."""
         self.stats["refill_traces"] += 1       # traced once per stream
         from .frames import refill_slot_env, refill_slot_frame
 
@@ -704,7 +797,7 @@ class FarmEngine:
         a0, envs = self._prep1(item)
         if loop.backend == "pallas-sharded":
             return self._refill_sharded(frames, env_frames, r, it, done,
-                                        idx, a0, envs)
+                                        hw, idx, a0, envs)
         if loop.backend == "jnp":
             frames = jax.lax.dynamic_update_slice(
                 frames, a0[None].astype(frames.dtype), (idx, 0, 0))
@@ -723,10 +816,11 @@ class FarmEngine:
         r = r.at[idx].set(jnp.asarray(loop._id, r.dtype))
         it = it.at[idx].set(0)
         done = done.at[idx].set(False)
-        return frames, env_frames, r, it, done
+        hw = hw.at[idx].set(0)
+        return frames, env_frames, r, it, done, hw
 
-    def _refill_sharded(self, frames, env_frames, r, it, done, idx, a0,
-                        envs):
+    def _refill_sharded(self, frames, env_frames, r, it, done, hw, idx,
+                        a0, envs):
         """Composed-mode slot hand-off: ``prep`` already ran on the
         WHOLE item (halo-aware); its (m, n) result splits at the
         shard_map boundary, each spatial shard scatters its LOCAL
@@ -747,8 +841,8 @@ class FarmEngine:
         local_L = self.lanes // self._nshards
         halo_env = self._eng._multistep
 
-        def local_refill(frames, env_frames, r, it, done, idx, a_loc,
-                         env_loc):
+        def local_refill(frames, env_frames, r, it, done, hw, idx,
+                         a_loc, env_loc):
             owns, li = local_slot(idx, local_L, self.lane_axis)
             frames = refill_slot_frame_sharded(
                 frames, a_loc, li, owns, self._lspec, loop.boundary)
@@ -761,17 +855,18 @@ class FarmEngine:
             r = jnp.where(upd, jnp.asarray(loop._id, r.dtype), r)
             it = jnp.where(upd, jnp.zeros_like(it), it)
             done = jnp.where(upd, jnp.zeros_like(done), done)
-            return frames, env_frames, r, it, done
+            hw = jnp.where(upd, jnp.zeros_like(hw), hw)
+            return frames, env_frames, r, it, done, hw
 
         env_specs = tuple(fspec for _ in env_frames)
         fn = shard_map(
             local_refill, mesh=self.mesh,
             in_specs=(fspec, env_specs, lane_spec, lane_spec, lane_spec,
-                      P(), spatial_spec,
+                      lane_spec, P(), spatial_spec,
                       tuple(spatial_spec for _ in envs)),
             out_specs=(fspec, env_specs, lane_spec, lane_spec,
-                       lane_spec))
-        return fn(frames, env_frames, r, it, done, idx, a0, envs)
+                       lane_spec, lane_spec))
+        return fn(frames, env_frames, r, it, done, hw, idx, a0, envs)
 
     def _extract_impl(self, frames, idx):
         """Slice ONE lane's (m, n) domain out at a dynamic index — the
@@ -826,6 +921,20 @@ class FarmEngine:
                     f"to {aval.shape}/{aval.dtype}, got "
                     f"{leaf.shape}/{leaf.dtype} (build a fresh "
                     "FarmEngine per item geometry)")
+        if self.check_finite:
+            for i, leaf in enumerate(leaves):
+                if np.issubdtype(leaf.dtype, np.floating) and \
+                        not np.isfinite(leaf).all():
+                    which = ("stream item" if i == 0
+                             else f"env stream item {i - 1}")
+                    raise NonFiniteItemError(
+                        f"{which} carries NaN/Inf input values — "
+                        "rejected at the prep boundary (a non-finite "
+                        "item poisons its lane and, on the sharded "
+                        "deployments, leaks into neighbour shards "
+                        "through the ghost exchange; pass "
+                        "check_finite=False to admit it anyway under "
+                        "sentinel quarantine)")
 
     def _bind_continuous(self):
         """Allocate the continuous carry around the bound slots: the jnp
@@ -871,24 +980,41 @@ class FarmEngine:
         r0 = np.full((L,), loop._id, np.dtype(r_aval.dtype))
         it0 = np.zeros((L,), np.int32)
         d0 = np.ones((L,), bool)
+        hw0 = np.zeros((L,), np.int32)
         if self.mesh is None:
-            carry = tuple(jnp.asarray(x) for x in (r0, it0, d0))
+            carry = tuple(jnp.asarray(x) for x in (r0, it0, d0, hw0))
         else:
             lane_sh = NamedSharding(self.mesh, P(self.lane_axis))
             carry = tuple(jax.device_put(x, lane_sh)
-                          for x in (r0, it0, d0))
+                          for x in (r0, it0, d0, hw0))
         self._cont_carry = carry
 
     def run_continuous(self, source, sink) -> int:
         """Drive a whole stream with continuous per-lane refill.
 
-        ``sink`` receives one :class:`StreamResult` per item, in
-        COMPLETION order (``.index`` is the stream position).  Protocol:
-        the farm advances in bounded segments; the moment a lane's
-        convergence loop finishes, its (m, n) result is extracted, the
-        next queued item takes over the slot in place, and the SAME
-        carry resumes — the other lanes never notice.  One compilation
-        serves every segment, refill and extraction.
+        ``sink`` receives one :class:`StreamResult` per stream item —
+        EXACTLY once each, in COMPLETION order (``.index`` is the stream
+        position).  Protocol: the farm advances in bounded segments; the
+        moment a lane's convergence loop finishes, its (m, n) result is
+        extracted, the next queued item takes over the slot in place,
+        and the SAME carry resumes — the other lanes never notice.  One
+        compilation serves every segment, refill and extraction.
+
+        Failure semantics (DESIGN.md §Failure semantics): a lane the
+        sentinel quarantined (poisoned / diverged) or that exhausted its
+        iteration budget finishes with a non-ok ``status``.  With
+        ``max_attempts > 1`` such an item re-enters a bounded retry
+        queue and is re-admitted into a FRESH slot (a fault pinned to a
+        slot must not follow the item); once its attempts are exhausted
+        it is emitted with its final non-ok status and recorded on
+        ``dead_letter``.  A slot that fails ``slot_patience``
+        CONSECUTIVE occupants is itself quarantined — retired from the
+        refill rotation (``stats["quarantined_slots"]``) — unless it is
+        the last slot standing.  Items failing the admission-time
+        finite check emit ``status="rejected"`` without touching a
+        slot.  Sweeps burned on non-ok occupants are booked as
+        ``stats["quarantined_lane_steps"]`` next to the barrier-waste
+        metric.
         """
         stream = iter(source() if callable(source) else source)
         first = next(stream, None)
@@ -905,51 +1031,108 @@ class FarmEngine:
         loop = self._loop
         L, unroll = self.lanes, loop.unroll
         frames, env_frames = self._frames, self._env_frames
-        r, itv, done = self._cont_carry
-        occupants: list = [None] * L      # slot -> stream index
+        r, itv, done, hw = self._cont_carry
+        occupants: list = [None] * L      # slot -> in-flight entry
+        slot_dead = [False] * L           # quarantined slots
+        slot_fails = [0] * L              # consecutive non-ok finishes
+        retry_q: list = []
         prev_it = np.zeros((L,), np.int64)
         pending, n_out, next_index = first, 0, 0
 
-        def next_item():
-            nonlocal pending
+        def pull_stream():
+            """Next stream item as an in-flight entry (index assigned at
+            pull time — the emission contract is exactly-once per
+            index, whatever slots or retries it passes through)."""
+            nonlocal pending, next_index
             if pending is not None:
                 x, pending = pending, None
-                return x
-            x = next(stream, None)
-            return None if x is None else _as_item(x)
-
-        def refill(slot, item):
-            nonlocal frames, env_frames, r, itv, done, next_index
-            self._check_item(item)
-            frames, env_frames, r, itv, done = self._refill_fn(
-                frames, env_frames, r, itv, done,
-                jnp.asarray(slot, jnp.int32),
-                jax.tree.map(jnp.asarray, item))
-            occupants[slot] = next_index
+            else:
+                x = next(stream, None)
+                x = None if x is None else _as_item(x)
+            if x is None:
+                return None
+            entry = {"index": next_index, "item": x, "attempts": 0,
+                     "bad_slots": set()}
             next_index += 1
+            return entry
+
+        def next_entry(slot):
+            """Retry entries first (fresh slots only), then the stream.
+            A retry whose bad-slot set covers this slot re-enters it
+            only as a last resort — stream drained AND no other live
+            slot that could ever take it (the lanes=1 degenerate)."""
+            for i, e in enumerate(retry_q):
+                if slot not in e["bad_slots"]:
+                    return retry_q.pop(i)
+            e = pull_stream()
+            if e is not None:
+                return e
+            others_live = any(
+                occupants[s] is not None and not slot_dead[s]
+                for s in range(L) if s != slot)
+            if retry_q and not others_live:
+                return retry_q.pop(0)
+            return None
+
+        def emit(entry, status, a=None, reduced=None, iters=0):
+            nonlocal n_out
+            res = StreamResult(index=entry["index"], a=a,
+                               reduced=reduced, iters=np.int32(iters),
+                               status=status,
+                               attempts=entry["attempts"])
+            if status != "ok":
+                self.dead_letter.append(res)
+            sink(res)
+            n_out += 1
+
+        def refill(slot, entry):
+            nonlocal frames, env_frames, r, itv, done, hw
+            entry["attempts"] += 1
+            frames, env_frames, r, itv, done, hw = self._refill_fn(
+                frames, env_frames, r, itv, done, hw,
+                jnp.asarray(slot, jnp.int32),
+                jax.tree.map(jnp.asarray, entry["item"]))
+            occupants[slot] = entry
             prev_it[slot] = 0
-            self.stats["h2d_bytes"] += _item_nbytes(item)
+            self.stats["h2d_bytes"] += _item_nbytes(entry["item"])
             self.stats["refills"] += 1
+
+        def admit(slot):
+            """Fill one free slot, skipping past items the admission
+            guard rejects (they emit + dead-letter without consuming
+            the slot; drift errors still raise)."""
+            while True:
+                entry = next_entry(slot)
+                if entry is None:
+                    return
+                try:
+                    self._check_item(entry["item"])
+                except NonFiniteItemError:
+                    self.stats["rejected"] += 1
+                    emit(entry, "rejected")
+                    continue
+                refill(slot, entry)
+                return
 
         try:
             for slot in range(L):
-                item = next_item()
-                if item is None:
+                admit(slot)
+                if occupants[slot] is None:     # stream already drained
                     break
-                refill(slot, item)
             # retired slots may carry iteration counts from a previous
             # stream — baseline the useful-work deltas on the real carry
             prev_it = np.asarray(itv).astype(np.int64)
 
             local_L = L // self._nshards
             while any(o is not None for o in occupants):
-                (frames, env_frames, r, itv, done,
+                (frames, env_frames, r, itv, done, hw,
                  steps) = self._segment_fn(frames, env_frames, r, itv,
-                                           done)
+                                           done, hw)
                 self.stats["segments"] += 1
                 done_h = np.asarray(done)
                 it_h = np.asarray(itv).astype(np.int64)
                 r_h = np.asarray(r)
+                hw_h = np.asarray(hw)
                 steps_h = np.asarray(steps).astype(np.int64)
                 # lane-step accounting: every body step advances (or
                 # idles) every lane of its shard by `unroll` sweeps
@@ -962,27 +1145,49 @@ class FarmEngine:
                 prev_it = it_h.copy()
                 finished = done_h | (it_h >= loop.max_iters)
                 for slot in range(L):
-                    if occupants[slot] is None or not finished[slot]:
+                    entry = occupants[slot]
+                    if entry is None or not finished[slot]:
                         continue
-                    out = np.asarray(self._extract_fn(
-                        frames, jnp.asarray(slot, jnp.int32)))
-                    self.stats["d2h_bytes"] += (out.nbytes
-                                                + r_h[slot].nbytes + 4)
-                    sink(StreamResult(index=occupants[slot], a=out,
-                                      reduced=r_h[slot],
-                                      iters=np.int32(it_h[slot])))
-                    n_out += 1
                     occupants[slot] = None
-                    item = next_item()
-                    if item is not None:
-                        refill(slot, item)
+                    status = item_status(hw_h[slot], it_h[slot],
+                                         loop.max_iters)
+                    if status != "ok":
+                        # sweeps burned on a doomed occupant
+                        self.stats["quarantined_lane_steps"] += \
+                            int(it_h[slot])
+                        slot_fails[slot] += 1
+                    else:
+                        slot_fails[slot] = 0
+                    if status != "ok" and \
+                            entry["attempts"] < self.max_attempts:
+                        entry["bad_slots"].add(slot)
+                        retry_q.append(entry)
+                        self.stats["retries"] += 1
+                    else:
+                        out = np.asarray(self._extract_fn(
+                            frames, jnp.asarray(slot, jnp.int32)))
+                        self.stats["d2h_bytes"] += (
+                            out.nbytes + r_h[slot].nbytes + 4)
+                        emit(entry, status, a=out, reduced=r_h[slot],
+                             iters=it_h[slot])
+                    if (not slot_dead[slot]
+                            and slot_fails[slot] >= self.slot_patience
+                            and L - sum(slot_dead) > 1):
+                        # the failures track the SLOT, not its items:
+                        # retire it from the rotation (never the last
+                        # slot standing)
+                        slot_dead[slot] = True
+                        self.stats["quarantined_slots"] += 1
+                        continue
+                    if not slot_dead[slot]:
+                        admit(slot)
         finally:
             # locals always name the LIVE buffers (the donated inputs
             # were consumed by the calls that produced these), so a
             # raising sink / shape check cannot strand the engine on
             # deleted device buffers
             self._frames, self._env_frames = frames, env_frames
-            self._cont_carry = (r, itv, done)
+            self._cont_carry = (r, itv, done, hw)
         self.stats["items"] += n_out
         return n_out
 
@@ -1025,8 +1230,9 @@ class FarmEngine:
         # ONE device→host pull per round (this is the point where the
         # host blocks on the in-flight round); per-item results are then
         # zero-copy numpy views, handed to the sink one at a time
-        outs, red, iters = jax.device_get(result)
+        outs, red, iters, hw = jax.device_get(result)
         self.stats["d2h_bytes"] += outs.nbytes + red.nbytes + iters.nbytes
         for i in range(outs.shape[0]):
-            sink(LoopResult(a=outs[i], reduced=red[i], iters=iters[i]))
+            sink(LoopResult(a=outs[i], reduced=red[i], iters=iters[i],
+                            health=hw[i]))
         return outs.shape[0]

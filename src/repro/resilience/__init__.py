@@ -1,0 +1,13 @@
+"""Resilience tier — deterministic fault injection for the farm layers.
+
+The chaos-test counterpart of the sentinel/quarantine machinery in
+:mod:`repro.core`: a seeded :class:`~repro.resilience.faults.FaultPlan`
+poisons chosen lanes at chosen sweeps (NaN), stalls lanes (a reduce
+value pinned above the convergence threshold), and corrupts stream
+items at the prep boundary — so CI can assert exactly-once delivery,
+no cross-lane contamination and graceful degradation under the exact
+same fault schedule on every run.
+"""
+from .faults import FaultPlan
+
+__all__ = ["FaultPlan"]

@@ -27,6 +27,7 @@ host, so tokenisation/detokenisation overlaps device decode.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import defaultdict
 from typing import List, Optional
 
@@ -37,6 +38,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from .engine import GenerateConfig, generate
 
+_EMPTY = np.zeros((0,), np.int32)
+
 
 @dataclasses.dataclass
 class Request:
@@ -44,26 +47,77 @@ class Request:
     prompt: np.ndarray           # (len,) int32
     max_new_tokens: Optional[int] = None   # per-request budget; None =
                                            # the engine's gcfg cap
+    deadline: Optional[float] = None       # absolute, on the batcher's
+                                           # clock; None = no deadline
 
 
 @dataclasses.dataclass
 class Result:
     rid: int
     tokens: np.ndarray           # (n_generated,) int32
+    status: str = "ok"           # ok | timed_out | shed | failed
+    error: Optional[str] = None  # why, for non-ok statuses
 
 
 class Batcher:
-    """FIFO exact-length-grouped batcher over the generate engine."""
+    """FIFO exact-length-grouped batcher over the generate engine.
+
+    Admission control (DESIGN.md §Failure semantics): ``max_queue``
+    bounds the submit queue — past it, :meth:`submit` SHEDS the request
+    (returns a ``status="shed"`` :class:`Result` instead of ``None``)
+    rather than queueing unbounded work.  With ``est_service_time`` set
+    (seconds per dispatched batch), a deadline-carrying request whose
+    PROJECTED queue delay already exceeds its deadline is shed at
+    submit too — load shedding at the door beats eviction after the
+    prefill is spent.  ``stats`` counts both shed reasons plus
+    downstream failures/evictions for backpressure monitoring.
+    """
 
     def __init__(self, cfg: ArchConfig, params, gcfg: GenerateConfig, *,
-                 max_batch: int = 8, cache_dtype=jnp.float32):
+                 max_batch: int = 8, cache_dtype=jnp.float32,
+                 max_queue: Optional[int] = None,
+                 est_service_time: Optional[float] = None, clock=None):
         self.cfg, self.params, self.gcfg = cfg, params, gcfg
         self.max_batch = max_batch
         self.cache_dtype = cache_dtype
+        self.max_queue = max_queue
+        self.est_service_time = est_service_time
+        self.clock = time.monotonic if clock is None else clock
         self._queue: List[Request] = []
+        self.stats = {"submitted": 0, "accepted": 0,
+                      "shed_queue_full": 0, "shed_deadline": 0,
+                      "failed": 0, "evicted": 0, "shed": 0}
 
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> Optional[Result]:
+        """Admit one request, or shed it with a reason.
+
+        Returns ``None`` on acceptance; on rejection, a terminal
+        ``status="shed"`` :class:`Result` whose ``error`` names the
+        reason (queue full / projected delay exceeds the deadline) —
+        the caller answers the client immediately instead of queueing
+        work that cannot finish in time.
+        """
+        self.stats["submitted"] += 1
+        if self.max_queue is not None and len(self._queue) >= \
+                self.max_queue:
+            self.stats["shed_queue_full"] += 1
+            return Result(rid=req.rid, tokens=_EMPTY, status="shed",
+                          error=f"admission queue full "
+                                f"(max_queue={self.max_queue})")
+        dl = getattr(req, "deadline", None)
+        if dl is not None and self.est_service_time is not None:
+            waves = len(self._queue) // self.max_batch + 1
+            projected = self.clock() + waves * self.est_service_time
+            if projected > dl:
+                self.stats["shed_deadline"] += 1
+                return Result(
+                    rid=req.rid, tokens=_EMPTY, status="shed",
+                    error=f"projected completion {projected:.3f} past "
+                          f"deadline {dl:.3f} "
+                          f"({waves} queued batch waves ahead)")
         self._queue.append(req)
+        self.stats["accepted"] += 1
+        return None
 
     def _form_batch(self) -> Optional[List[Request]]:
         if not self._queue:
@@ -102,8 +156,17 @@ class Batcher:
         # host blocks on the in-flight round) — indexing the
         # device-resident ``lengths`` element-by-element would issue one
         # blocking transfer per request
-        gen = np.asarray(gen)
-        lengths = np.asarray(lengths)
+        try:
+            gen = np.asarray(gen)
+            lengths = np.asarray(lengths)
+        except Exception as e:               # noqa: BLE001 — a poisoned
+            # batch (device fault, NaN trap, cancelled buffer) must
+            # degrade to per-request failed Results, not lose every
+            # in-flight result of the stream
+            for r in batch:
+                out.append(Result(rid=r.rid, tokens=_EMPTY,
+                                  status="failed", error=str(e)))
+            return
         for i, r in enumerate(batch):
             out.append(Result(rid=r.rid, tokens=gen[i, :int(lengths[i])]))
 
@@ -126,6 +189,7 @@ class Batcher:
                 break
         if inflight is not None:
             self._drain(inflight, out)
+        self.stats["failed"] += sum(r.status == "failed" for r in out)
         return out
 
     def run_continuous(self, exact_groups: Optional[bool] = None
@@ -159,6 +223,34 @@ class Batcher:
             return out
         if exact_groups is None:
             exact_groups = _arch_has_ssm(self.cfg)
+
+        def serve(eng, group):
+            """Drive one engine over one group, degrading a mid-stream
+            exception to per-request failed Results instead of losing
+            every in-flight result (results already emitted before the
+            fault survive on ``out`` untouched)."""
+            emitted = set()
+
+            def sink(rid, toks, status):
+                emitted.add(rid)
+                out.append(Result(
+                    rid=rid, tokens=toks, status=status,
+                    error=None if status == "ok"
+                    else f"engine status {status}"))
+
+            try:
+                eng.run(group, sink, clock=self.clock)
+            except Exception as e:           # noqa: BLE001 — degrade
+                for r in group:
+                    if r.rid not in emitted:
+                        out.append(Result(rid=r.rid, tokens=_EMPTY,
+                                          status="failed",
+                                          error=str(e)))
+                        self.stats["failed"] += 1
+            self.stats["evicted"] += eng.stats["evicted"]
+            self.stats["shed"] += eng.stats["shed"]
+            self.engines.append(eng)
+
         if not exact_groups:
             maxL = max(len(r.prompt) for r in self._queue)
             # construct BEFORE emptying the queue: an unsupported cfg
@@ -168,9 +260,7 @@ class Batcher:
                 self.cfg, self.params, self.gcfg, slots=self.max_batch,
                 cache_dtype=self.cache_dtype, max_prompt_len=maxL)
             queue, self._queue = self._queue, []
-            eng.run(queue, lambda rid, toks: out.append(
-                Result(rid=rid, tokens=toks)))
-            self.engines.append(eng)
+            serve(eng, queue)
             return out
         while self._queue:
             L = len(self._queue[0].prompt)      # FIFO head sets the group
@@ -179,7 +269,5 @@ class Batcher:
             eng = ContinuousEngine(
                 self.cfg, self.params, self.gcfg, slots=self.max_batch,
                 cache_dtype=self.cache_dtype)
-            eng.run(group, lambda rid, toks: out.append(
-                Result(rid=rid, tokens=toks)))
-            self.engines.append(eng)
+            serve(eng, group)
         return out

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Optional
 
 import jax
@@ -229,10 +230,15 @@ class ContinuousEngine:
                                    donate_argnums=(1, 2, 3, 4, 5, 6, 7))
         self._prefill_fn = jax.jit(self._prefill_impl,
                                    donate_argnums=(1, 2, 3, 4, 5, 6, 7))
+        # deadline eviction with an empty queue: retire the slot in
+        # place (same compilation for every eviction, done donated)
+        self._retire_fn = jax.jit(
+            lambda done, idx: done.at[idx].set(True),
+            donate_argnums=(0,))
         self.stats = {"requests": 0, "segments": 0, "prefills": 0,
                       "emitted": 0, "segment_traces": 0,
                       "prefill_traces": 0, "slot_steps": 0,
-                      "idle_slot_steps": 0}
+                      "idle_slot_steps": 0, "evicted": 0, "shed": 0}
 
     # -- static geometry (first run binds the shapes) --------------------
     def _bind(self, prompt_len: int):
@@ -339,12 +345,26 @@ class ContinuousEngine:
         return caches, out, done, t, budget, keys, plens, steps
 
     # -- the dispatcher ---------------------------------------------------
-    def run(self, requests, emit) -> int:
+    def run(self, requests, emit, *, clock=None) -> int:
         """Serve ``requests`` (RAGGED prompt lengths and wildly
         different ``.max_new_tokens`` welcome) through the slots,
-        calling ``emit(rid, tokens)`` the moment each finishes —
+        calling ``emit(rid, tokens, status)`` the moment each finishes —
         completion order, mid-batch.  Returns the number of emissions.
+
+        A request may carry an absolute ``.deadline`` (on ``clock``'s
+        timeline; default ``time.monotonic`` — tests inject a fake
+        clock for determinism).  A request whose deadline has already
+        passed at admission is SHED: emitted immediately with
+        ``status="timed_out"`` and no tokens, never touching a slot
+        (``stats["shed"]``).  A slot whose occupant's deadline passes
+        mid-decode is EVICTED after the current segment: its partial
+        tokens emit with ``status="timed_out"`` and the KV slot is
+        freed for the next queued request through the ordinary refill
+        path — or retired in place when the queue is empty
+        (``stats["evicted"]``).  No deadline → the request always runs
+        to EOS or budget (``status="ok"``).
         """
+        clock = time.monotonic if clock is None else clock
         queue = list(requests)
         if not queue:
             return 0
@@ -376,6 +396,25 @@ class ContinuousEngine:
         n_emit = 0
         prev_t = np.asarray(t).astype(np.int64)
 
+        def deadline_of(req):
+            return getattr(req, "deadline", None)
+
+        def pull():
+            """Next admissible request — requests already past their
+            deadline are shed here, without ever touching a slot."""
+            nonlocal n_emit
+            while queue:
+                req = queue.pop()
+                dl = deadline_of(req)
+                if dl is not None and clock() >= dl:
+                    emit(req.rid, np.zeros((0,), np.int32), "timed_out")
+                    n_emit += 1
+                    self.stats["shed"] += 1
+                    self.stats["requests"] += 1
+                    continue
+                return req
+            return None
+
         def admit(slot, req):
             nonlocal caches, out, done, t, budget, keys, plens
             bud = request_budget(req, cap)
@@ -397,9 +436,10 @@ class ContinuousEngine:
 
         try:
             for slot in range(self.slots):
-                if not queue:
+                req = pull()
+                if req is None:
                     break
-                admit(slot, queue.pop())
+                admit(slot, req)
 
             while any(o is not None for o in occupants):
                 (caches, out, done, t, budget, keys, plens,
@@ -418,16 +458,39 @@ class ContinuousEngine:
                 self.stats["idle_slot_steps"] += \
                     steps_h * self.slots - useful
                 prev_t = t_h.copy()
+                now = clock()
                 for slot in range(self.slots):
-                    if occupants[slot] is None or not done_h[slot]:
-                        continue
                     req = occupants[slot]
-                    emit(req.rid, out_h[slot, :int(t_h[slot])].copy())
-                    n_emit += 1
-                    self.stats["emitted"] += 1
-                    occupants[slot] = None
-                    if queue:
-                        admit(slot, queue.pop())
+                    if req is None:
+                        continue
+                    if done_h[slot]:
+                        emit(req.rid, out_h[slot, :int(t_h[slot])].copy(),
+                             "ok")
+                        n_emit += 1
+                        self.stats["emitted"] += 1
+                        occupants[slot] = None
+                        nxt = pull()
+                        if nxt is not None:
+                            admit(slot, nxt)
+                        continue
+                    dl = deadline_of(req)
+                    if dl is not None and now >= dl:
+                        # deadline eviction: the partial output emits
+                        # now and the KV slot is freed mid-batch — the
+                        # next request prefills over it (the ordinary
+                        # refill path evicts the stale keys wholesale),
+                        # or the slot retires in place
+                        emit(req.rid, out_h[slot, :int(t_h[slot])].copy(),
+                             "timed_out")
+                        n_emit += 1
+                        self.stats["evicted"] += 1
+                        occupants[slot] = None
+                        nxt = pull()
+                        if nxt is not None:
+                            admit(slot, nxt)
+                        else:
+                            done = self._retire_fn(
+                                done, jnp.asarray(slot, jnp.int32))
         finally:
             # locals always name the LIVE buffers (the donated inputs
             # were consumed by the calls that produced these), so a

@@ -461,9 +461,9 @@ def _segment_jaxpr(backend, unroll=1):
     loop = mk_countdown(backend, max_iters=32, unroll=unroll)
     eng = FarmEngine(loop, lanes=2, segment=4)
     eng.run(trip_items([3, 5, 4]), lambda r: None, continuous=True)
-    r, it, done = eng._cont_carry
+    r, it, done, hw = eng._cont_carry
     return eng, jax.make_jaxpr(eng._segment_entry)(
-        eng._frames, eng._env_frames, r, it, done)
+        eng._frames, eng._env_frames, r, it, done, hw)
 
 
 class TestContinuousJaxpr:
@@ -493,11 +493,11 @@ class TestContinuousJaxpr:
     def test_segment_while_body_is_the_persistent_kernel(self, backend,
                                                          unroll):
         eng, _ = _segment_jaxpr(backend, unroll)
-        r, it, done = eng._cont_carry
+        r, it, done, hw = eng._cont_carry
         eqns = while_body_eqns(
-            lambda fr, rr, ii, dd: eng._segment_entry(fr, (), rr, ii,
-                                                      dd)[0],
-            eng._frames, r, it, done)
+            lambda fr, rr, ii, dd, hh: eng._segment_entry(fr, (), rr, ii,
+                                                          dd, hh)[0],
+            eng._frames, r, it, done, hw)
         names = [e.primitive.name for e in eqns]
         assert "pallas_call" in names
         assert "pad" not in names
@@ -509,10 +509,10 @@ class TestContinuousJaxpr:
         strip ghost refreshes — nothing frame-stack-sized materialises,
         no pad, no re-framing."""
         eng, _ = _segment_jaxpr(backend, unroll)
-        r, it, done = eng._cont_carry
+        r, it, done, hw = eng._cont_carry
         item = jnp.asarray(trip_items([3])[0])
         jaxpr = jax.make_jaxpr(eng._refill_impl)(
-            eng._frames, eng._env_frames, r, it, done,
+            eng._frames, eng._env_frames, r, it, done, hw,
             jnp.asarray(0, jnp.int32), item)
         eqns = flatten_eqns(jaxpr.jaxpr, [])
         names = [e.primitive.name for e in eqns]
@@ -838,7 +838,7 @@ print("OKORDER")
 from repro.core.introspect import flatten_eqns
 eng = FarmEngine(mk(part), lanes=4, mesh=mesh, segment=4)
 eng.run(trip_items([3, 5, 4, 2, 6]), lambda r: None, continuous=True)
-r, it, done = eng._cont_carry
+r, it, done, hw = eng._cont_carry
 
 def collective_axes(eqns):
     axes = set()
@@ -855,7 +855,7 @@ def collective_axes(eqns):
 # the steady-state SEGMENT: no pad, ghost exchange along the spatial
 # axis only, nothing along the lane axis
 jaxpr = jax.make_jaxpr(eng._segment_entry)(
-    eng._frames, eng._env_frames, r, it, done)
+    eng._frames, eng._env_frames, r, it, done, hw)
 seg = flatten_eqns(jaxpr.jaxpr, [])
 names = [e.primitive.name for e in seg]
 assert "pad" not in names, "re-framing pad in the composed segment"
@@ -867,7 +867,7 @@ assert "data" not in axes, ("cross-lane collective in segment", axes)
 # interior each, and again no lane-axis collective
 item = jnp.asarray(trip_items([3])[0])
 jaxpr = jax.make_jaxpr(eng._refill_impl)(
-    eng._frames, eng._env_frames, r, it, done,
+    eng._frames, eng._env_frames, r, it, done, hw,
     jnp.asarray(0, jnp.int32), item)
 ref = flatten_eqns(jaxpr.jaxpr, [])
 names = [e.primitive.name for e in ref]

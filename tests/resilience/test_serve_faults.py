@@ -1,0 +1,269 @@
+"""Serve-tier failure semantics: deadlines, eviction, admission control.
+
+All timing is DETERMINISTIC — the engine and batcher take a pluggable
+``clock``, and these tests hand them a counting clock (one tick per
+read), so deadline arithmetic replays identically on any machine.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import transformer as T
+from repro.serve import GenerateConfig
+from repro.serve.batcher import Batcher, Request, Result
+from repro.serve.engine import ContinuousEngine
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_reduced("qwen3-1.7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def ticking_clock():
+    ticks = [0]
+
+    def clock():
+        ticks[0] += 1
+        return float(ticks[0])
+    return clock
+
+
+def collect():
+    got = {}
+
+    def sink(rid, toks, status):
+        assert rid not in got, f"duplicate emission for {rid}"
+        got[rid] = (np.asarray(toks), status)
+    return got, sink
+
+
+def never_eos(cfg, max_new):
+    """eos outside the vocab: decode always runs to the token budget —
+    segment counts become deterministic."""
+    return GenerateConfig(max_new_tokens=max_new, eos_id=cfg.vocab_size,
+                          temperature=0.0)
+
+
+class TestEngineDeadlines:
+    def test_expired_request_is_shed_at_admission(self, served, rng):
+        cfg, params = served
+        gcfg = never_eos(cfg, 4)
+        eng = ContinuousEngine(cfg, params, gcfg, slots=2,
+                               cache_dtype=jnp.float32, segment=2)
+        prompt = np.asarray(rng.integers(2, cfg.vocab_size, 5), np.int32)
+        reqs = [Request(rid=0, prompt=prompt),
+                Request(rid=1, prompt=prompt, deadline=-1.0),
+                Request(rid=2, prompt=prompt)]
+        got, sink = collect()
+        n = eng.run(reqs, sink, clock=ticking_clock())
+        assert n == 3
+        assert got[1][1] == "timed_out" and len(got[1][0]) == 0
+        assert got[0][1] == "ok" and len(got[0][0]) == 4
+        assert got[2][1] == "ok" and len(got[2][0]) == 4
+        assert eng.stats["shed"] == 1
+        assert eng.stats["evicted"] == 0
+        assert eng.stats["prefills"] == 2     # the shed one never lands
+
+    def test_mid_decode_eviction_frees_the_slot(self, served, rng):
+        """A slot whose occupant's deadline passes mid-decode emits its
+        PARTIAL tokens and hands the KV slot to the next queued request
+        through the ordinary refill path — the queue keeps draining."""
+        cfg, params = served
+        gcfg = never_eos(cfg, 12)
+        eng = ContinuousEngine(cfg, params, gcfg, slots=2,
+                               cache_dtype=jnp.float32, segment=2)
+        prompt = np.asarray(rng.integers(2, cfg.vocab_size, 5), np.int32)
+        # the counting clock reads once per admission pull and once per
+        # segment: rid1's deadline of 3.0 passes after the first
+        # segment, long before its 12-token budget
+        reqs = [Request(rid=0, prompt=prompt, max_new_tokens=6),
+                Request(rid=1, prompt=prompt, deadline=3.0),
+                Request(rid=2, prompt=prompt, max_new_tokens=4)]
+        got, sink = collect()
+        n = eng.run(reqs, sink, clock=ticking_clock())
+        assert n == 3
+        toks1, status1 = got[1]
+        assert status1 == "timed_out"
+        assert 0 < len(toks1) < 12            # partial, not empty
+        assert got[0][1] == "ok" and len(got[0][0]) == 6
+        assert got[2][1] == "ok" and len(got[2][0]) == 4
+        assert eng.stats["evicted"] == 1
+        assert eng.stats["shed"] == 0
+        # one compilation still serves every segment and prefill
+        assert eng.stats["segment_traces"] == 1
+        assert eng.stats["prefill_traces"] == 1
+
+    def test_eviction_with_empty_queue_retires_the_slot(self, served,
+                                                        rng):
+        """No replacement queued: the evicted slot is retired in place
+        (done-masked) — the stream ends instead of spinning it."""
+        cfg, params = served
+        gcfg = never_eos(cfg, 12)
+        eng = ContinuousEngine(cfg, params, gcfg, slots=2,
+                               cache_dtype=jnp.float32, segment=2)
+        prompt = np.asarray(rng.integers(2, cfg.vocab_size, 5), np.int32)
+        reqs = [Request(rid=0, prompt=prompt, max_new_tokens=4),
+                Request(rid=1, prompt=prompt, deadline=3.0)]
+        got, sink = collect()
+        assert eng.run(reqs, sink, clock=ticking_clock()) == 2
+        assert got[1][1] == "timed_out"
+        assert got[0][1] == "ok" and len(got[0][0]) == 4
+        assert eng.stats["evicted"] == 1
+
+    def test_healthy_requests_identical_under_degradation(self, served,
+                                                          rng):
+        """Greedy decode of the healthy requests is bit-identical
+        whether or not doomed requests share the pool (an eviction must
+        not perturb a neighbour slot's decode path)."""
+        cfg, params = served
+        gcfg = never_eos(cfg, 6)
+        prompts = [np.asarray(rng.integers(2, cfg.vocab_size, 5),
+                              np.int32) for _ in range(4)]
+        healthy = [Request(rid=i, prompt=prompts[i]) for i in range(4)]
+        doomed = [Request(rid=10, prompt=prompts[0], deadline=-1.0),
+                  Request(rid=11, prompt=prompts[1], deadline=4.0)]
+
+        def drive(reqs):
+            eng = ContinuousEngine(cfg, params, gcfg, slots=2,
+                                   cache_dtype=jnp.float32, segment=2)
+            got, sink = collect()
+            eng.run(reqs, sink, clock=ticking_clock())
+            return got
+
+        ref = drive(healthy)
+        mixed = drive([healthy[0], doomed[0], healthy[1], doomed[1],
+                       healthy[2], healthy[3]])
+        for i in range(4):
+            assert mixed[i][1] == "ok"
+            np.testing.assert_array_equal(mixed[i][0], ref[i][0])
+
+
+class TestBatcherAdmission:
+    def test_queue_bound_sheds_with_reason(self, served, rng):
+        cfg, params = served
+        gcfg = GenerateConfig(max_new_tokens=4, eos_id=1)
+        b = Batcher(cfg, params, gcfg, max_batch=2, max_queue=2)
+        prompt = np.asarray(rng.integers(2, cfg.vocab_size, 5), np.int32)
+        assert b.submit(Request(rid=0, prompt=prompt)) is None
+        assert b.submit(Request(rid=1, prompt=prompt)) is None
+        rej = b.submit(Request(rid=2, prompt=prompt))
+        assert isinstance(rej, Result)
+        assert rej.status == "shed" and "queue full" in rej.error
+        assert len(rej.tokens) == 0
+        assert b.stats["shed_queue_full"] == 1
+        assert b.stats["accepted"] == 2
+
+    def test_projected_delay_past_deadline_sheds(self, served, rng):
+        """With est_service_time set, a deadline the queue cannot meet
+        is refused at the door — before any device work is spent."""
+        cfg, params = served
+        gcfg = GenerateConfig(max_new_tokens=4, eos_id=1)
+        b = Batcher(cfg, params, gcfg, max_batch=2,
+                    est_service_time=10.0, clock=ticking_clock())
+        prompt = np.asarray(rng.integers(2, cfg.vocab_size, 5), np.int32)
+        # no deadline: always admitted, whatever the queue looks like
+        for i in range(4):
+            assert b.submit(Request(rid=i, prompt=prompt)) is None
+        # 4 queued = 3 batch waves ahead at max_batch=2 → projected
+        # ~30 ticks out; a deadline of 5 cannot be met
+        rej = b.submit(Request(rid=9, prompt=prompt, deadline=5.0))
+        assert rej is not None and rej.status == "shed"
+        assert "deadline" in rej.error
+        assert b.stats["shed_deadline"] == 1
+        # a generous deadline is admitted
+        assert b.submit(Request(rid=10, prompt=prompt,
+                                deadline=1e6)) is None
+
+    def test_shed_never_blocks_undeadlined_requests(self, served, rng):
+        cfg, params = served
+        gcfg = GenerateConfig(max_new_tokens=3, eos_id=1)
+        b = Batcher(cfg, params, gcfg, max_batch=2,
+                    est_service_time=10.0, clock=ticking_clock())
+        prompt = np.asarray(rng.integers(2, cfg.vocab_size, 5), np.int32)
+        assert b.submit(Request(rid=0, prompt=prompt)) is None
+        res = b.run_all()
+        assert len(res) == 1 and res[0].status == "ok"
+
+
+class TestBatcherDegradation:
+    def test_drain_failure_degrades_to_failed_results(self, served, rng):
+        """A poisoned in-flight batch (device pull raises) yields one
+        failed Result per request — results already drained and batches
+        still queued are untouched."""
+        cfg, params = served
+        gcfg = GenerateConfig(max_new_tokens=4, eos_id=1)
+        b = Batcher(cfg, params, gcfg, max_batch=2)
+        batch = [Request(rid=i, prompt=np.asarray(
+            rng.integers(2, cfg.vocab_size, 5), np.int32))
+            for i in range(2)]
+
+        class Boom:
+            def __array__(self, dtype=None, copy=None):
+                raise RuntimeError("device buffer poisoned")
+
+        out = [Result(rid=99, tokens=np.zeros((2,), np.int32))]
+        b._drain((batch, Boom(), Boom()), out)
+        assert len(out) == 3
+        assert out[0].rid == 99                      # prior result kept
+        for r in out[1:]:
+            assert r.status == "failed"
+            assert "poisoned" in r.error
+            assert len(r.tokens) == 0
+
+    def test_continuous_midstream_exception_degrades(self, served, rng,
+                                                     monkeypatch):
+        """An engine fault mid-stream: results emitted BEFORE the fault
+        survive, the unemitted requests become failed Results with the
+        error attached — nothing is silently lost, nothing raises
+        through run_continuous."""
+        cfg, params = served
+        gcfg = GenerateConfig(max_new_tokens=3, eos_id=1)
+        b = Batcher(cfg, params, gcfg, max_batch=2)
+        prompts = [np.asarray(rng.integers(2, cfg.vocab_size, 5),
+                              np.int32) for _ in range(4)]
+        for i, p in enumerate(prompts):
+            b.submit(Request(rid=i, prompt=p))
+
+        real_run = ContinuousEngine.run
+        state = {"emitted": 0}
+
+        def flaky_run(self, requests, emit, **kw):
+            def tripwire(rid, toks, status):
+                emit(rid, toks, status)
+                state["emitted"] += 1
+                if state["emitted"] == 2:
+                    raise RuntimeError("lost the accelerator")
+            return real_run(self, requests, tripwire, **kw)
+
+        monkeypatch.setattr(ContinuousEngine, "run", flaky_run)
+        res = b.run_continuous()
+        by_rid = {r.rid: r for r in res}
+        assert sorted(by_rid) == [0, 1, 2, 3]
+        oks = [r for r in res if r.status == "ok"]
+        fails = [r for r in res if r.status == "failed"]
+        assert len(oks) == 2 and len(fails) == 2
+        assert all("lost the accelerator" in r.error for r in fails)
+        assert b.stats["failed"] == 2
+
+    def test_continuous_statuses_ride_results(self, served, rng):
+        """Engine-level deadline outcomes surface as Result.status via
+        the batcher, with the eviction counted in batcher stats."""
+        cfg, params = served
+        # budget 24 spans three of the engine's default segment=8
+        # windows, so rid 1's deadline passes mid-decode
+        gcfg = never_eos(cfg, 24)
+        b = Batcher(cfg, params, gcfg, max_batch=2,
+                    clock=ticking_clock())
+        prompt = np.asarray(rng.integers(2, cfg.vocab_size, 5), np.int32)
+        b.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+        b.submit(Request(rid=1, prompt=prompt, deadline=3.0))
+        res = {r.rid: r for r in b.run_continuous()}
+        assert res[0].status == "ok" and len(res[0].tokens) == 4
+        assert res[1].status == "timed_out"
+        assert len(res[1].tokens) < 24
+        assert res[1].error is not None
+        assert b.stats["evicted"] + b.stats["shed"] == 1

@@ -136,12 +136,12 @@ class TestContinuousBatching:
         prompt = np.asarray(rng.integers(2, cfg.vocab_size, 4), np.int32)
         reqs = [Request(rid=i, prompt=prompt) for i in range(2)]
 
-        def boom(rid, toks):
+        def boom(rid, toks, status):
             raise RuntimeError("sink failed")
         with pytest.raises(RuntimeError, match="sink failed"):
             eng.run(reqs, boom)
         got = []
-        assert eng.run(reqs, lambda rid, toks: got.append(rid)) == 2
+        assert eng.run(reqs, lambda rid, toks, status: got.append(rid)) == 2
         assert sorted(got) == [0, 1]
 
     def test_unsupported_models_and_overbudget_rejected(self, served,
@@ -156,10 +156,10 @@ class TestContinuousBatching:
         prompt = np.asarray(rng.integers(2, cfg.vocab_size, 4), np.int32)
         with pytest.raises(ValueError, match="budget"):
             eng.run([Request(rid=0, prompt=prompt, max_new_tokens=9)],
-                    lambda rid, toks: None)
+                    lambda rid, toks, status: None)
         with pytest.raises(ValueError, match="budget"):
             eng.run([Request(rid=0, prompt=prompt, max_new_tokens=0)],
-                    lambda rid, toks: None)
+                    lambda rid, toks, status: None)
         # ragged prompts are admitted into ONE pool now; only a prompt
         # LONGER than the bound slot width is rejected
         eng2 = ContinuousEngine(cfg, params, gcfg, slots=2,
@@ -167,7 +167,7 @@ class TestContinuousBatching:
                                 max_prompt_len=4)
         with pytest.raises(ValueError, match="max_prompt_len"):
             eng2.run([Request(rid=0, prompt=np.concatenate(
-                [prompt, prompt]))], lambda rid, toks: None)
+                [prompt, prompt]))], lambda rid, toks, status: None)
         # ragged + SSM has no pad-masking path: loud error, and the
         # Batcher falls back to exact-length grouping automatically
         mamba = get_reduced("mamba2-130m")
@@ -176,7 +176,7 @@ class TestContinuousBatching:
         with pytest.raises(ValueError, match="attention-only"):
             eng3.run([Request(rid=0, prompt=prompt),
                       Request(rid=1, prompt=prompt[:2])],
-                     lambda rid, toks: None)
+                     lambda rid, toks, status: None)
 
 
 class TestRaggedContinuous:
