@@ -37,6 +37,13 @@ resident, and its µs-scale loops drown deployment differences in host
 scheduler noise).  In CPU interpret mode the emulated kernel dominates
 wall time, so lane_engine ≈ batch_farm is the expected CI reading; the
 framing/allocation work the slots avoid only surfaces on TPU.
+
+:func:`run_recovery` measures the preemption-recovery path (DESIGN.md
+§Recovery): a recovery-armed continuous farm is killed at ~50% of its
+segments in a subprocess, respawned via
+``repro.resilience.run_to_completion``, and the resumed run's
+``recovery_seconds`` / ``replayed_items`` / ``recovered_occupants``
+are reported next to the fault-free wall time.
 """
 from __future__ import annotations
 
@@ -234,6 +241,113 @@ def run_composed_continuous(size=64, stream_n=12, lanes=4,
     return rows
 
 
+_RECOVERY_WORKER = """
+import json, os, sys
+sys.path.insert(0, %(src)r)
+import time
+import numpy as np
+from repro.core import FarmEngine, LoopOfStencilReduce
+from repro.resilience import FaultPlan, RecoveryConfig
+
+SIZE, STREAM_N, LANES, AT = %(size)d, %(stream_n)d, %(lanes)d, %(at)d
+
+def mk():
+    return LoopOfStencilReduce(
+        f=lambda get, *_: get(0, 0) - 1.0, k=1, combine="max",
+        cond=lambda r: r < 0.5, boundary="zero", max_iters=64,
+        backend="pallas", block=(32, 128))
+
+base = np.linspace(0.1, 0.9, SIZE * SIZE,
+                   dtype=np.float32).reshape(SIZE, SIZE)
+trips = [40 if i %% 4 == 3 else 2 for i in range(STREAM_N)]
+items = [base + float(t) - 1.0 for t in trips]
+
+rec = RecoveryConfig(dir=%(recdir)r, snapshot_every=1)
+resume = os.path.isdir(rec.snap_dir) or os.path.exists(rec.journal_path)
+# armed on first launch only; AT sits at ~50%% of the uninterrupted
+# run's segment count
+hook = None if resume else FaultPlan(
+    lanes=LANES, preempt_at_segment=AT).preempt_hook()
+eng = FarmEngine(mk(), lanes=LANES, segment=8)
+t0 = time.perf_counter()
+n = eng.run(items, lambda r: None, continuous=True, recovery=rec,
+            resume=resume, on_segment=hook)
+wall = time.perf_counter() - t0
+with open(%(statpath)r, "w") as f:
+    json.dump({"n_out": n, "wall": wall,
+               "recovery_seconds": eng.stats["recovery_seconds"],
+               "replayed_items": eng.stats["replayed_items"],
+               "recovered_occupants": eng.stats["recovered_occupants"],
+               "segments": eng.stats["segments"],
+               "snapshots": eng.stats["snapshots"]}, f)
+"""
+
+
+def run_recovery(size=64, stream_n=16, lanes=4) -> list[dict]:
+    """Preempt-at-~50%% kill-and-respawn: a recovery-armed continuous
+    farm is killed (``os._exit``, no cleanup) halfway through a bimodal
+    stream and respawned with ``--resume`` semantics.  Records the
+    resumed run's ``recovery_seconds`` (journal replay + snapshot
+    restore + re-seating, the restart tax the snapshot cadence buys)
+    and ``replayed_items`` / ``recovered_occupants`` next to the
+    fault-free wall time — the robustness claim's standing perf row."""
+    import json
+    import os
+    import subprocess
+    import sys
+    import tempfile
+    import time as _time
+
+    from repro.resilience.recovery import run_to_completion
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    # fault-free baseline in-process (same engine config)
+    base = np.linspace(0.1, 0.9, size * size,
+                       dtype=np.float32).reshape(size, size)
+    items = [base + float(40 if i % 4 == 3 else 2) - 1.0
+             for i in range(stream_n)]
+    eng0 = FarmEngine(_mk_countdown(), lanes=lanes, segment=8)
+    eng0.run(items, lambda r: None, continuous=True)     # compile
+    segments0 = eng0.stats["segments"]
+    eng1 = FarmEngine(_mk_countdown(), lanes=lanes, segment=8)
+    t0 = _time.perf_counter()
+    n0 = eng1.run(items, lambda r: None, continuous=True)
+    t_clean = _time.perf_counter() - t0
+    assert n0 == stream_n
+
+    with tempfile.TemporaryDirectory() as d:
+        statpath = os.path.join(d, "stats.json")
+        code = _RECOVERY_WORKER % {
+            "src": src, "size": size, "stream_n": stream_n,
+            "lanes": lanes, "at": max(segments0 // 2, 1),
+            "recdir": os.path.join(d, "rec"), "statpath": statpath}
+        env = dict(os.environ)
+        try:
+            t0 = _time.perf_counter()
+            restarts = run_to_completion(
+                [sys.executable, "-c", code], env=env, max_restarts=4,
+                timeout=900)
+            t_total = _time.perf_counter() - t0
+            with open(statpath) as f:
+                st = json.load(f)
+        except Exception as e:
+            return [record(f"stream_{size}_recovery_preempt50", -1.0,
+                           derived=f"ERROR:{type(e).__name__}")]
+    if st["n_out"] != stream_n:
+        return [record(f"stream_{size}_recovery_preempt50", -1.0,
+                       derived=f"ERROR:items={st['n_out']}")]
+    return [record(
+        f"stream_{size}_recovery_preempt50", st["wall"],
+        backend="pallas",
+        derived=(f"recovery_seconds={st['recovery_seconds']:.4f};"
+                 f"replayed_items={st['replayed_items']};"
+                 f"recovered_occupants={st['recovered_occupants']};"
+                 f"restarts={restarts};"
+                 f"snapshots={st['snapshots']};"
+                 f"clean_wall={t_clean:.4f};"
+                 f"total_wall_with_kill={t_total:.4f}"))]
+
+
 def run(sizes=(64,), stream_n=24, lanes=4, iters=9) -> list[dict]:
     rows = []
     rng = np.random.default_rng(0)
@@ -302,6 +416,8 @@ def run(sizes=(64,), stream_n=24, lanes=4, iters=9) -> list[dict]:
                            lanes=lanes, iters=max(iters // 2, 3))
     rows += run_composed_continuous(size=min(sizes), lanes=lanes,
                                     iters=max(iters // 3, 2))
+    rows += run_recovery(size=min(sizes),
+                         stream_n=max(stream_n // 2, 8), lanes=lanes)
     return rows
 
 

@@ -9,6 +9,17 @@ instead (per-sequence KV-slot refill, mid-batch emission): requests with
 wildly different prompt lengths AND token budgets stream through ONE
 engine binding of ``--batch`` persistent slots (padded per-slot prefill
 with a prompt-length mask) and are printed in COMPLETION order.
+
+``--recover-dir <dir>`` arms preemption recovery on the continuous
+path (WAL journal + per-segment snapshots, DESIGN.md §Recovery);
+``--resume`` restarts a killed serve from that dir — pre-crash results
+replay from the journal, in-flight decodes continue mid-generation
+(even with a different ``--batch``):
+
+    PYTHONPATH=src python examples/serve_lm.py --continuous \\
+        --recover-dir /tmp/serve_rec            # kill it mid-run...
+    PYTHONPATH=src python examples/serve_lm.py --continuous \\
+        --recover-dir /tmp/serve_rec --resume   # ...finishes the rest
 """
 import argparse
 import sys
@@ -38,7 +49,24 @@ def main():
     ap.add_argument("--requests", type=int, default=8,
                     help="request count for --continuous (> --batch "
                          "slots, so slots get reused mid-batch)")
+    ap.add_argument("--recover-dir", default=None,
+                    help="arm preemption recovery (journal + "
+                         "snapshots) on the continuous path")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a killed --continuous run from "
+                         "--recover-dir (replays + continues; submit "
+                         "nothing new)")
     args = ap.parse_args()
+    if args.resume and not args.recover_dir:
+        ap.error("--resume needs --recover-dir")
+    if args.resume:
+        # the snapshot's token cap sizes the decode buffers — adopt it
+        # so the resumed engine binds identically to the killed one
+        from repro.resilience import RecoveryConfig
+        from repro.resilience.recovery import load_snapshot
+        st = load_snapshot(RecoveryConfig(dir=args.recover_dir).snap_dir)
+        if st is not None and st.get("kind") == "serve":
+            args.max_new = int(st["cap"])
 
     cfg = get_reduced(args.arch)     # reduced config: CPU-friendly
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -58,13 +86,19 @@ def main():
         # ragged prompts: one slot pool serves every length
         plens = [max(2, (args.prompt_len - 3 * i) % args.prompt_len + 1)
                  for i in range(args.requests)]
-        for i, bud in enumerate(budgets):
-            b.submit(Request(
-                rid=i, max_new_tokens=bud,
-                prompt=np.asarray(rng.integers(
-                    2, cfg.vocab_size, plens[i]), np.int32)))
+        if not args.resume:    # a resumed run picks its requests up
+            for i, bud in enumerate(budgets):  # from the snapshot
+                b.submit(Request(
+                    rid=i, max_new_tokens=bud,
+                    prompt=np.asarray(rng.integers(
+                        2, cfg.vocab_size, plens[i]), np.int32)))
+        recovery = None
+        if args.recover_dir:
+            from repro.resilience import RecoveryConfig
+            recovery = RecoveryConfig(dir=args.recover_dir)
         t0 = time.perf_counter()
-        results = b.run_continuous()
+        results = b.run_continuous(recovery=recovery,
+                                   resume=args.resume)
         dt = time.perf_counter() - t0
         eng = b.engines[0]
         total = sum(len(r.tokens) for r in results)
@@ -75,6 +109,12 @@ def main():
               f"{eng.stats['segments']} segments, "
               f"{eng.stats['prefills']} slot prefills, "
               f"{eng.stats['idle_slot_steps']} idle slot-steps)")
+        if args.resume:
+            print(f"[serve_lm] resumed: "
+                  f"{eng.stats['replayed_items']} replayed from the "
+                  f"journal, {eng.stats['recovered_occupants']} decodes "
+                  f"continued mid-generation, recovery took "
+                  f"{eng.stats['recovery_seconds']:.3f}s")
         for r in results:           # completion order
             print(f"  rid{r.rid} prompt={plens[r.rid]} "
                   f"budget={budgets[r.rid]} "

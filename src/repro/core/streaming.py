@@ -251,13 +251,17 @@ class StreamResult:
     ``status`` is the failure-semantics verdict (see :func:`item_status`
     plus ``"rejected"`` for items that failed the admission-time finite
     check); ``attempts`` counts slot occupations (> 1 means the item was
-    retried on a fresh slot after a non-ok finish)."""
+    retried on a fresh slot after a non-ok finish).  ``error`` carries
+    the host-side exception text when a result had to be degraded (a
+    raising sink — the result lives on ``dead_letter`` instead of being
+    lost with the stream)."""
     index: int
     a: Any
     reduced: Any
     iters: Any
     status: str = "ok"
     attempts: int = 1
+    error: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -402,6 +406,8 @@ class FarmEngine:
                                    donate_argnums=(0, 1, 2, 3, 4, 5))
         self._refill_fn = jax.jit(self._refill_impl,
                                   donate_argnums=(0, 1, 2, 3, 4, 5))
+        self._restore_fn = jax.jit(self._restore_impl,
+                                   donate_argnums=(0, 1, 2, 3, 4, 5))
         self._extract_fn = jax.jit(self._extract_impl)
         self._waste_buf: list = []      # (waste, iters, hw, count)
                                         # device tuples, converted
@@ -412,7 +418,13 @@ class FarmEngine:
                       "lane_steps": 0, "wasted_lane_steps": 0,
                       "quarantined_lane_steps": 0, "retries": 0,
                       "rejected": 0, "quarantined_slots": 0,
-                      "segment_traces": 0, "refill_traces": 0}
+                      "segment_traces": 0, "refill_traces": 0,
+                      "sink_errors": 0, "snapshots": 0,
+                      "replayed_items": 0, "recovered_occupants": 0,
+                      "recovery_seconds": 0.0}
+        self._resume_state = None       # staged by restore()
+        self._rt_capture = None         # live snapshot closure, set by
+                                        # run_continuous for snapshot()
 
     # -- static geometry (first item binds the shapes) -------------------
     def _bind(self, item):
@@ -791,13 +803,38 @@ class FarmEngine:
         health word re-arms to 0 with the rest of the carry: a slot's
         faults do not follow it onto the next occupant."""
         self.stats["refill_traces"] += 1       # traced once per stream
+        loop = self._loop
+        a0, envs = self._prep1(item)
+        return self._slot_write(frames, env_frames, r, it, done, hw, idx,
+                                a0, envs, loop._id, 0, 0)
+
+    def _restore_impl(self, frames, env_frames, r, it, done, hw, idx,
+                      item, a_mid, rv, iv, hv):
+        """Re-seat a snapshotted in-flight occupant into a (possibly
+        different) slot: the saved mid-flight LOGICAL interior ``a_mid``
+        takes the place of a fresh item's prepped ``a0`` and the carry
+        re-arms with the saved ``(reduce, iter, health)`` instead of the
+        identity — the convergence loop continues from iteration ``iv``
+        exactly as if the preemption never happened.  Ghost/boundary
+        cells are re-derived by the same refill machinery a fresh item
+        uses (they are a function of interior + boundary spec, and the
+        next sweep re-asserts them before reading), which is what makes
+        snapshots topology-free: this path repacks the interior onto
+        whatever lane count / mesh the RESUMED engine runs.  ``prep``
+        re-derives the env fields from the raw item (prep must be
+        deterministic — the same property retries already rely on)."""
+        _, envs = self._prep1(item)
+        return self._slot_write(frames, env_frames, r, it, done, hw, idx,
+                                a_mid, envs, rv, iv, hv)
+
+    def _slot_write(self, frames, env_frames, r, it, done, hw, idx,
+                    a0, envs, rv, iv, hv):
         from .frames import refill_slot_env, refill_slot_frame
 
         loop = self._loop
-        a0, envs = self._prep1(item)
         if loop.backend == "pallas-sharded":
             return self._refill_sharded(frames, env_frames, r, it, done,
-                                        hw, idx, a0, envs)
+                                        hw, idx, a0, envs, rv, iv, hv)
         if loop.backend == "jnp":
             frames = jax.lax.dynamic_update_slice(
                 frames, a0[None].astype(frames.dtype), (idx, 0, 0))
@@ -813,14 +850,14 @@ class FarmEngine:
                 refill_slot_env(ef, e, idx, spec, loop.boundary,
                                 halo=self._eng._halo_env)
                 for ef, e in zip(env_frames, envs))
-        r = r.at[idx].set(jnp.asarray(loop._id, r.dtype))
-        it = it.at[idx].set(0)
+        r = r.at[idx].set(jnp.asarray(rv, r.dtype))
+        it = it.at[idx].set(jnp.asarray(iv, it.dtype))
         done = done.at[idx].set(False)
-        hw = hw.at[idx].set(0)
+        hw = hw.at[idx].set(jnp.asarray(hv, hw.dtype))
         return frames, env_frames, r, it, done, hw
 
     def _refill_sharded(self, frames, env_frames, r, it, done, hw, idx,
-                        a0, envs):
+                        a0, envs, rv, iv, hv):
         """Composed-mode slot hand-off: ``prep`` already ran on the
         WHOLE item (halo-aware); its (m, n) result splits at the
         shard_map boundary, each spatial shard scatters its LOCAL
@@ -842,7 +879,7 @@ class FarmEngine:
         halo_env = self._eng._multistep
 
         def local_refill(frames, env_frames, r, it, done, hw, idx,
-                         a_loc, env_loc):
+                         a_loc, env_loc, rv, iv, hv):
             owns, li = local_slot(idx, local_L, self.lane_axis)
             frames = refill_slot_frame_sharded(
                 frames, a_loc, li, owns, self._lspec, loop.boundary)
@@ -852,10 +889,10 @@ class FarmEngine:
                 for ef, e in zip(env_frames, env_loc))
             upd = jnp.logical_and(owns,
                                   jnp.arange(r.shape[0]) == li)
-            r = jnp.where(upd, jnp.asarray(loop._id, r.dtype), r)
-            it = jnp.where(upd, jnp.zeros_like(it), it)
+            r = jnp.where(upd, jnp.asarray(rv, r.dtype), r)
+            it = jnp.where(upd, jnp.asarray(iv, it.dtype), it)
             done = jnp.where(upd, jnp.zeros_like(done), done)
-            hw = jnp.where(upd, jnp.zeros_like(hw), hw)
+            hw = jnp.where(upd, jnp.asarray(hv, hw.dtype), hw)
             return frames, env_frames, r, it, done, hw
 
         env_specs = tuple(fspec for _ in env_frames)
@@ -863,10 +900,11 @@ class FarmEngine:
             local_refill, mesh=self.mesh,
             in_specs=(fspec, env_specs, lane_spec, lane_spec, lane_spec,
                       lane_spec, P(), spatial_spec,
-                      tuple(spatial_spec for _ in envs)),
+                      tuple(spatial_spec for _ in envs), P(), P(), P()),
             out_specs=(fspec, env_specs, lane_spec, lane_spec,
                        lane_spec, lane_spec))
-        return fn(frames, env_frames, r, it, done, hw, idx, a0, envs)
+        return fn(frames, env_frames, r, it, done, hw, idx, a0, envs,
+                  jnp.asarray(rv), jnp.asarray(iv), jnp.asarray(hv))
 
     def _extract_impl(self, frames, idx):
         """Slice ONE lane's (m, n) domain out at a dynamic index — the
@@ -989,7 +1027,50 @@ class FarmEngine:
                           for x in (r0, it0, d0, hw0))
         self._cont_carry = carry
 
-    def run_continuous(self, source, sink) -> int:
+    # -- snapshot / restore (preemption recovery) ------------------------
+    def snapshot(self) -> dict:
+        """The in-flight continuous-stream state as ONE logical tree:
+        every occupied slot's mid-flight interior (extracted UNSHARDED,
+        whatever the deployment), its ``(reduce, iter, health)`` carry
+        and raw item, the retry queue, and the source cursor
+        (``next_index``).  Everything is topology-free — a snapshot
+        taken at lanes=L over mesh=M restores onto any other lane
+        count / mesh (:meth:`restore` repacks the interiors through the
+        same refill machinery fresh items use).  Slot quarantine and
+        bad-slot sets are deliberately NOT captured: they describe the
+        old process's physical slots, not the stream.
+
+        Only meaningful at a segment boundary — call it from an
+        ``on_segment`` callback (or pass ``recovery=`` to
+        :meth:`run_continuous`, which snapshots automatically)."""
+        if self._rt_capture is None:
+            raise ValueError(
+                "snapshot() captures continuous-stream state; nothing "
+                "has streamed yet — run run_continuous (pass recovery= "
+                "to persist snapshots automatically)")
+        return self._rt_capture()
+
+    def restore(self, state: dict) -> "FarmEngine":
+        """Stage a :meth:`snapshot` tree; the next :meth:`run_continuous`
+        resumes from it: the source is fast-forwarded past the snapshot's
+        cursor, in-flight occupants re-enter fresh slots mid-iteration,
+        and pre-crash retries keep their attempt counts.  The engine's
+        own geometry may differ from the snapshotting engine's (elastic
+        resume); the ITEM geometry may not."""
+        if self._mode == "round":
+            raise ValueError("engine already streamed in round mode; "
+                             "build a fresh FarmEngine to restore into")
+        if not isinstance(state, dict) or state.get("kind") != "farm":
+            raise ValueError("not a FarmEngine snapshot tree")
+        if int(state.get("version", -1)) != 1:
+            raise ValueError("unsupported FarmEngine snapshot version "
+                             f"{state.get('version')!r}")
+        self._resume_state = state
+        return self
+
+    def run_continuous(self, source, sink, *, recovery=None,
+                       resume: bool = False,
+                       on_segment: Optional[Callable] = None) -> int:
         """Drive a whole stream with continuous per-lane refill.
 
         ``sink`` receives one :class:`StreamResult` per stream item —
@@ -1015,18 +1096,133 @@ class FarmEngine:
         slot.  Sweeps burned on non-ok occupants are booked as
         ``stats["quarantined_lane_steps"]`` next to the barrier-waste
         metric.
+
+        Preemption recovery (DESIGN.md §Recovery): with ``recovery=``
+        (a :class:`repro.resilience.recovery.RecoveryConfig`) every
+        emitted result is write-ahead journaled (fsync'd, CRC-framed)
+        BEFORE it reaches the sink, and the whole in-flight state — see
+        :meth:`snapshot` — is published atomically every
+        ``snapshot_every`` segments.  ``resume=True`` restarts a killed
+        run: the journal replays pre-crash results to the sink (each
+        index suppressed from re-emission — exactly-once across
+        restarts), the source is fast-forwarded past the snapshot
+        cursor (it must re-yield the same items from position 0 —
+        deterministic sources, the property retries already rely on),
+        and occupants continue mid-iteration.  The resumed engine may
+        run a DIFFERENT lane count or mesh (elastic resume).  RPO: at
+        most ``snapshot_every`` segments of compute are redone; no
+        emitted result is ever emitted twice.  ``on_segment`` is called
+        with the cumulative segment count at every segment boundary —
+        the seam ``FaultPlan.preempt_hook`` kills through, and where a
+        caller may take its own :meth:`snapshot`.
         """
-        stream = iter(source() if callable(source) else source)
-        first = next(stream, None)
-        if first is None:
-            return 0
+        import time as _time
+
         if self._mode == "round":
             raise ValueError("engine already streamed in round mode; "
                              "build a fresh FarmEngine for continuous")
         self._mode = "continuous"
-        first = _as_item(first)
+
+        t_resume0 = _time.perf_counter()
+        state = None
+        if self._resume_state is not None:
+            state, self._resume_state = self._resume_state, None
+        elif recovery is not None and resume:
+            from repro.resilience.recovery import load_snapshot
+            state = load_snapshot(recovery.snap_dir)
+
+        journal = None
+        emitted_pre: set = set()
+        n_out = 0
+
+        def deliver(res, journal_rec=True):
+            """WAL-ordered emission: journal (fsync'd) FIRST, then the
+            sink.  A raising sink degrades the result to ``dead_letter``
+            with its error attached instead of killing the stream and
+            losing the in-flight slots' items — the journal already
+            holds the payload, so a resumed run re-delivers it."""
+            nonlocal n_out
+            if journal is not None and journal_rec:
+                journal.append({
+                    "index": int(res.index), "status": res.status,
+                    "attempts": int(res.attempts),
+                    "iters": int(res.iters), "reduced": res.reduced,
+                    "a": res.a, "error": res.error})
+            try:
+                sink(res)
+            except Exception as e:
+                self.stats["sink_errors"] += 1
+                res = dataclasses.replace(
+                    res,
+                    status="failed" if res.status == "ok" else res.status,
+                    error=f"sink raised: {type(e).__name__}: {e}")
+            if res.status != "ok":
+                self.dead_letter.append(res)
+            n_out += 1
+
+        if recovery is not None and resume:
+            from repro.resilience.recovery import Journal
+            for rec in Journal.replay(recovery.journal_path):
+                ridx = int(rec["index"])
+                if ridx in emitted_pre:
+                    continue
+                emitted_pre.add(ridx)
+                deliver(StreamResult(
+                    index=ridx, a=rec.get("a"),
+                    reduced=rec.get("reduced"),
+                    iters=np.int32(rec.get("iters") or 0),
+                    status=rec.get("status", "ok"),
+                    attempts=int(rec.get("attempts") or 1),
+                    error=rec.get("error")), journal_rec=False)
+                self.stats["replayed_items"] += 1
+        if recovery is not None:
+            from repro.resilience.recovery import Journal
+            journal = Journal(recovery.journal_path,
+                              fsync=recovery.fsync)
+
+        if state is not None and state.get("complete"):
+            # the preempted run had already drained its stream; the
+            # journal replay above re-delivered every result (the
+            # segment counter still restores — snapshot step numbering
+            # stays monotonic if this engine runs again)
+            self.stats["segments"] = int(state.get("segments", 0))
+            if journal is not None:
+                journal.close()
+            self.stats["items"] += n_out
+            self.stats["recovery_seconds"] += (
+                _time.perf_counter() - t_resume0)
+            return n_out
+
+        stream = iter(source() if callable(source) else source)
+        pending = None
+        saved_occ = list(state.get("occupants") or ()) if state else []
+        saved_retry = list(state.get("retry") or ()) if state else []
+        if state is not None:
+            # fast-forward the source cursor: positions below
+            # next_index were pulled pre-crash — each is either in the
+            # snapshot (in flight / queued) or in the journal (emitted)
+            next_index = int(state["next_index"])
+            stream = islice(stream, next_index, None)
+            probe = None
+            if saved_occ or saved_retry:
+                probe = _as_item((saved_occ + saved_retry)[0]["item"])
+            else:
+                first = next(stream, None)
+                if first is not None:
+                    pending = probe = _as_item(first)
+        else:
+            next_index = 0
+            probe = None
+            first = next(stream, None)
+            if first is not None:
+                pending = probe = _as_item(first)
+        if probe is None:      # nothing in flight AND stream drained
+            if journal is not None:
+                journal.close()
+            self.stats["items"] += n_out
+            return n_out
         if not self._bound:
-            self._bind(first)
+            self._bind(probe)
         self._bind_continuous()
         loop = self._loop
         L, unroll = self.lanes, loop.unroll
@@ -1037,7 +1233,25 @@ class FarmEngine:
         slot_fails = [0] * L              # consecutive non-ok finishes
         retry_q: list = []
         prev_it = np.zeros((L,), np.int64)
-        pending, n_out, next_index = first, 0, 0
+
+        if state is not None:
+            # restored occupants re-enter through the retry-first
+            # admission path, carrying their saved mid-flight state (a
+            # resumed engine with FEWER lanes simply keeps the excess
+            # queued); plain retries keep their attempt counts.  Slot
+            # quarantine / bad-slot sets are physical facts about the
+            # dead process's hardware and do not survive.
+            self.stats["segments"] = int(state.get("segments", 0))
+            for e in saved_occ:
+                retry_q.append({
+                    "index": int(e["index"]), "item": e["item"],
+                    "attempts": int(e["attempts"]), "bad_slots": set(),
+                    "carry": (e["a"], e["r"], int(e["it"]),
+                              int(e["hw"]))})
+            for e in saved_retry:
+                retry_q.append({
+                    "index": int(e["index"]), "item": e["item"],
+                    "attempts": int(e["attempts"]), "bad_slots": set()})
 
         def pull_stream():
             """Next stream item as an in-flight entry (index assigned at
@@ -1075,36 +1289,50 @@ class FarmEngine:
             return None
 
         def emit(entry, status, a=None, reduced=None, iters=0):
-            nonlocal n_out
-            res = StreamResult(index=entry["index"], a=a,
-                               reduced=reduced, iters=np.int32(iters),
-                               status=status,
-                               attempts=entry["attempts"])
-            if status != "ok":
-                self.dead_letter.append(res)
-            sink(res)
-            n_out += 1
+            deliver(StreamResult(index=entry["index"], a=a,
+                                 reduced=reduced, iters=np.int32(iters),
+                                 status=status,
+                                 attempts=entry["attempts"]))
 
         def refill(slot, entry):
             nonlocal frames, env_frames, r, itv, done, hw
-            entry["attempts"] += 1
-            frames, env_frames, r, itv, done, hw = self._refill_fn(
-                frames, env_frames, r, itv, done, hw,
-                jnp.asarray(slot, jnp.int32),
-                jax.tree.map(jnp.asarray, entry["item"]))
+            carry = entry.pop("carry", None)
+            if carry is None:
+                entry["attempts"] += 1
+                frames, env_frames, r, itv, done, hw = self._refill_fn(
+                    frames, env_frames, r, itv, done, hw,
+                    jnp.asarray(slot, jnp.int32),
+                    jax.tree.map(jnp.asarray, entry["item"]))
+                prev_it[slot] = 0
+            else:
+                # a snapshotted occupant continues its SAME occupation
+                # (attempts unchanged) from its saved iteration
+                a_mid, rs, its, hws = carry
+                frames, env_frames, r, itv, done, hw = self._restore_fn(
+                    frames, env_frames, r, itv, done, hw,
+                    jnp.asarray(slot, jnp.int32),
+                    jax.tree.map(jnp.asarray, entry["item"]),
+                    jnp.asarray(a_mid), jnp.asarray(rs),
+                    jnp.asarray(its, jnp.int32),
+                    jnp.asarray(hws, jnp.int32))
+                prev_it[slot] = int(its)
+                self.stats["recovered_occupants"] += 1
             occupants[slot] = entry
-            prev_it[slot] = 0
             self.stats["h2d_bytes"] += _item_nbytes(entry["item"])
             self.stats["refills"] += 1
 
         def admit(slot):
             """Fill one free slot, skipping past items the admission
             guard rejects (they emit + dead-letter without consuming
-            the slot; drift errors still raise)."""
+            the slot; drift errors still raise) and items whose final
+            result was journaled pre-crash (already re-delivered by the
+            replay — recomputing them would break exactly-once)."""
             while True:
                 entry = next_entry(slot)
                 if entry is None:
                     return
+                if entry["index"] in emitted_pre:
+                    continue
                 try:
                     self._check_item(entry["item"])
                 except NonFiniteItemError:
@@ -1114,6 +1342,46 @@ class FarmEngine:
                 refill(slot, entry)
                 return
 
+        def capture(complete=None):
+            """Build the :meth:`snapshot` tree from the live run state.
+            Interiors extract through the un-donated ``_extract_fn`` —
+            the resident frames stay untouched."""
+            r_cur = np.asarray(r)
+            it_cur = np.asarray(itv).astype(np.int64)
+            hw_cur = np.asarray(hw)
+            occ = []
+            for s in range(L):
+                e = occupants[s]
+                if e is None:
+                    continue
+                a_mid = np.asarray(self._extract_fn(
+                    frames, jnp.asarray(s, jnp.int32)))
+                occ.append({"index": int(e["index"]),
+                            "attempts": int(e["attempts"]),
+                            "item": e["item"], "a": a_mid,
+                            "r": r_cur[s], "it": int(it_cur[s]),
+                            "hw": int(hw_cur[s])})
+            if complete is None:
+                complete = not occ and not retry_q
+            return {"kind": "farm", "version": 1,
+                    "segments": int(self.stats["segments"]),
+                    "next_index": int(next_index), "n_out": int(n_out),
+                    "occupants": occ,
+                    "retry": [{"index": int(e["index"]),
+                               "attempts": int(e["attempts"]),
+                               "item": e["item"]} for e in retry_q],
+                    "complete": bool(complete)}
+
+        self._rt_capture = capture
+
+        def persist(complete=None):
+            if recovery is None:
+                return
+            from repro.resilience.recovery import save_snapshot
+            save_snapshot(recovery.snap_dir, self.stats["segments"],
+                          capture(complete), keep=recovery.keep)
+            self.stats["snapshots"] += 1
+
         try:
             for slot in range(L):
                 admit(slot)
@@ -1122,6 +1390,11 @@ class FarmEngine:
             # retired slots may carry iteration counts from a previous
             # stream — baseline the useful-work deltas on the real carry
             prev_it = np.asarray(itv).astype(np.int64)
+            persist(complete=False)   # RPO anchor: recoverable before
+                                      # the first segment even starts
+            if state is not None or resume:
+                self.stats["recovery_seconds"] += (
+                    _time.perf_counter() - t_resume0)
 
             local_L = L // self._nshards
             while any(o is not None for o in occupants):
@@ -1129,6 +1402,12 @@ class FarmEngine:
                  steps) = self._segment_fn(frames, env_frames, r, itv,
                                            done, hw)
                 self.stats["segments"] += 1
+                if on_segment is not None:
+                    # the preemption seam: fires BEFORE this segment's
+                    # results are journaled — the harshest crash point
+                    # (computed-but-unjournaled work is redone from the
+                    # last snapshot, never re-emitted)
+                    on_segment(self.stats["segments"])
                 done_h = np.asarray(done)
                 it_h = np.asarray(itv).astype(np.int64)
                 r_h = np.asarray(r)
@@ -1181,6 +1460,11 @@ class FarmEngine:
                         continue
                     if not slot_dead[slot]:
                         admit(slot)
+                if recovery is not None and \
+                        self.stats["segments"] % \
+                        recovery.snapshot_every == 0:
+                    persist()
+            persist(complete=True)
         finally:
             # locals always name the LIVE buffers (the donated inputs
             # were consumed by the calls that produced these), so a
@@ -1188,11 +1472,15 @@ class FarmEngine:
             # deleted device buffers
             self._frames, self._env_frames = frames, env_frames
             self._cont_carry = (r, itv, done, hw)
+            if journal is not None:
+                journal.close()
         self.stats["items"] += n_out
         return n_out
 
     # -- the stream protocol (read ∥ compute ∥ write) --------------------
-    def run(self, source, sink, *, continuous: bool = False) -> int:
+    def run(self, source, sink, *, continuous: bool = False,
+            recovery=None, resume: bool = False,
+            on_segment: Optional[Callable] = None) -> int:
         """Drive a whole stream: ``source`` yields items (callable
         returning an iterator, or an iterable), ``sink`` consumes one
         :class:`~repro.core.pattern.LoopResult` per item, in order.
@@ -1205,9 +1493,18 @@ class FarmEngine:
         refill mode instead (see :meth:`run_continuous`): the sink
         receives :class:`StreamResult` objects in completion order and
         no lane ever idles behind a straggler in another slot.
+        ``recovery`` / ``resume`` / ``on_segment`` pass through to the
+        continuous path (round mode has no segment boundaries to
+        snapshot at).
         """
         if continuous:
-            return self.run_continuous(source, sink)
+            return self.run_continuous(source, sink, recovery=recovery,
+                                       resume=resume,
+                                       on_segment=on_segment)
+        if recovery is not None or resume or on_segment is not None:
+            raise ValueError(
+                "recovery/resume/on_segment need continuous=True "
+                "(round mode has no segment boundaries to snapshot at)")
         it = iter(source() if callable(source) else source)
         n = 0
         inflight = None

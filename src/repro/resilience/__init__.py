@@ -7,7 +7,20 @@ value pinned above the convergence threshold), and corrupts stream
 items at the prep boundary — so CI can assert exactly-once delivery,
 no cross-lane contamination and graceful degradation under the exact
 same fault schedule on every run.
+
+PR 7 adds the PROCESS-fault axis: :mod:`~repro.resilience.recovery`
+holds the snapshot + write-ahead-journal layer (atomic directory
+publish, structure-preserving snapshots, CRC-framed fsync'd journal,
+kill-and-respawn harness), and ``FaultPlan`` grew
+``preempt_at_segment`` / :meth:`~repro.resilience.faults.FaultPlan.preempt_hook`
+so the chaos suite can kill a run at a seeded segment boundary and
+assert the resumed run is exactly-once and bit-identical.
 """
 from .faults import FaultPlan
+from .recovery import (PREEMPTED_EXIT, Journal, PreemptionError,
+                       RecoveryConfig, latest_snapshot_step, load_snapshot,
+                       run_to_completion, save_snapshot)
 
-__all__ = ["FaultPlan"]
+__all__ = ["FaultPlan", "RecoveryConfig", "Journal", "PreemptionError",
+           "PREEMPTED_EXIT", "save_snapshot", "load_snapshot",
+           "latest_snapshot_step", "run_to_completion"]

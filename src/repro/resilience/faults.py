@@ -50,12 +50,19 @@ class FaultPlan:
                            planted at the prep boundary
                            (:meth:`corrupt_stream`) — admission-check
                            fodder.
+    ``preempt_at_segment`` — a PROCESS fault: the dispatcher is killed
+                           after completing this many segments (1-based)
+                           via the ``on_segment`` seam in
+                           ``FarmEngine.run_continuous`` /
+                           ``ContinuousEngine.run``.  See
+                           :meth:`preempt_hook`.
     """
     lanes: int
     nan_events: Tuple[Tuple[int, int], ...] = ()
     stall_events: Tuple[Tuple[int, int], ...] = ()
     corrupt_indices: Tuple[int, ...] = ()
     stall_value: float = 1e9
+    preempt_at_segment: "int | None" = None
 
     def __post_init__(self):
         for lane, _ in (*self.nan_events, *self.stall_events):
@@ -67,13 +74,15 @@ class FaultPlan:
     def seeded(cls, seed: int, lanes: int, *, n_nan: int = 1,
                n_stall: int = 1, nan_from_max: int = 4,
                stall_until: int = 1 << 20, n_corrupt: int = 0,
-               n_items: int = 0, stall_value: float = 1e9
-               ) -> "FaultPlan":
+               n_items: int = 0, stall_value: float = 1e9,
+               preempt_within: int = 0) -> "FaultPlan":
         """Draw a reproducible plan: ``n_nan`` + ``n_stall`` DISTINCT
         victim lanes (never more than ``lanes - 1`` total — at least one
         lane always stays healthy, so every chaos test has a clean
         control group), NaN triggers in ``[1, nan_from_max]``, and
         ``n_corrupt`` corrupted stream positions out of ``n_items``.
+        ``preempt_within > 0`` additionally draws a kill point
+        ``preempt_at_segment`` uniformly from ``[1, preempt_within]``.
         Same seed → same plan, bit for bit."""
         rng = np.random.default_rng(seed)
         n_victims = min(n_nan + n_stall, max(lanes - 1, 0))
@@ -88,9 +97,11 @@ class FaultPlan:
         if n_corrupt and n_items:
             corrupt = tuple(int(i) for i in np.sort(rng.choice(
                 n_items, size=min(n_corrupt, n_items), replace=False)))
+        preempt = (int(rng.integers(1, preempt_within + 1))
+                   if preempt_within > 0 else None)
         return cls(lanes=lanes, nan_events=nan_events,
                    stall_events=stall_events, corrupt_indices=corrupt,
-                   stall_value=stall_value)
+                   stall_value=stall_value, preempt_at_segment=preempt)
 
     # -- the device-side seam ---------------------------------------------
     def reduce_hook(self):
@@ -119,6 +130,43 @@ class FaultPlan:
         """A copy of ``loop`` carrying this plan's hook (the original is
         untouched — run both to compare faulted vs fault-free)."""
         return dataclasses.replace(loop, fault_hook=self.reduce_hook())
+
+    # -- the process-fault seam -------------------------------------------
+    def preempt_hook(self, mode: str = "exit"):
+        """An ``on_segment(segments_done)`` callback that preempts the
+        process once ``segments_done`` reaches ``preempt_at_segment``.
+
+        ``mode="exit"`` dies via ``os._exit(PREEMPTED_EXIT)`` — no
+        ``finally`` blocks, no atexit, no flushing: the closest a test
+        gets to SIGKILL-on-spot-reclaim while staying portable.  The
+        ``recovery.run_to_completion`` harness respawns on that exit
+        code.  ``mode="raise"`` raises
+        :class:`~repro.resilience.recovery.PreemptionError` instead, for
+        in-process tests that resume inside the same interpreter (the
+        engine's ``finally`` DOES run — strictly gentler than a kill, so
+        subprocess tests stay the authority on crash-hardness).
+
+        Fires at most once per process (a resumed run that passes the
+        same plan again is not re-killed unless it re-reaches the
+        threshold counting from ITS OWN segment 0 — pass ``None``
+        recovery-side to disarm instead)."""
+        if self.preempt_at_segment is None:
+            return None
+        import os as _os
+
+        from .recovery import PREEMPTED_EXIT, PreemptionError
+        threshold = self.preempt_at_segment
+        fired = []
+
+        def hook(segments_done: int):
+            if fired or segments_done < threshold:
+                return
+            fired.append(segments_done)
+            if mode == "raise":
+                raise PreemptionError(
+                    f"seeded preemption at segment {segments_done}")
+            _os._exit(PREEMPTED_EXIT)
+        return hook
 
     # -- the prep-boundary seam -------------------------------------------
     def corrupt_item(self, item):

@@ -192,8 +192,9 @@ class Batcher:
         self.stats["failed"] += sum(r.status == "failed" for r in out)
         return out
 
-    def run_continuous(self, exact_groups: Optional[bool] = None
-                       ) -> List[Result]:
+    def run_continuous(self, exact_groups: Optional[bool] = None, *,
+                       recovery=None, resume: bool = False,
+                       on_segment=None) -> List[Result]:
         """Drain the queue with continuous batching (per-sequence KV-slot
         refill, :class:`repro.serve.engine.ContinuousEngine`).
 
@@ -214,15 +215,31 @@ class Batcher:
         ``idle_slot_steps`` comparison, and the automatic fallback for
         SSM/hybrid archs, whose sequential state updates have no
         pad-masking path).
+
+        ``recovery=`` / ``resume=`` / ``on_segment=`` pass through to
+        :meth:`ContinuousEngine.run` (single-pool path only — an exact
+        group's engine identity is derived from the queue, which a
+        snapshot cannot pin): a killed drain resumes exactly-once, with
+        pre-crash emissions replayed from the journal and in-flight
+        decodes continuing mid-generation, even on a different
+        ``max_batch``.  On resume the submitted queue may be EMPTY —
+        the engine re-binds from the snapshot's prompt width and picks
+        up the snapshotted requests.
         """
         from .engine import ContinuousEngine, _arch_has_ssm
 
         out: List[Result] = []
         self.engines: List[ContinuousEngine] = []
-        if not self._queue:
+        if exact_groups and recovery is not None:
+            raise ValueError(
+                "recovery= needs the single-pool path (exact_groups "
+                "slices the queue into per-length engines — a snapshot "
+                "cannot name which engine it belongs to)")
+        if not self._queue and not (recovery is not None and resume):
             return out
         if exact_groups is None:
-            exact_groups = _arch_has_ssm(self.cfg)
+            exact_groups = (False if recovery is not None
+                            else _arch_has_ssm(self.cfg))
 
         def serve(eng, group):
             """Drive one engine over one group, degrading a mid-stream
@@ -239,20 +256,32 @@ class Batcher:
                     else f"engine status {status}"))
 
             try:
-                eng.run(group, sink, clock=self.clock)
+                eng.run(group, sink, clock=self.clock,
+                        recovery=recovery, resume=resume,
+                        on_segment=on_segment)
             except Exception as e:           # noqa: BLE001 — degrade
-                for r in group:
-                    if r.rid not in emitted:
-                        out.append(Result(rid=r.rid, tokens=_EMPTY,
-                                          status="failed",
-                                          error=str(e)))
-                        self.stats["failed"] += 1
+                survivors = [r for r in group if r.rid not in emitted]
+                if not survivors:
+                    # nothing to degrade INTO a failed Result (e.g. a
+                    # resume with an empty submitted queue hitting a
+                    # snapshot-validation error) — swallowing here
+                    # would hide the fault entirely
+                    self.engines.append(eng)
+                    raise
+                for r in survivors:
+                    out.append(Result(rid=r.rid, tokens=_EMPTY,
+                                      status="failed",
+                                      error=str(e)))
+                    self.stats["failed"] += 1
             self.stats["evicted"] += eng.stats["evicted"]
             self.stats["shed"] += eng.stats["shed"]
             self.engines.append(eng)
 
         if not exact_groups:
-            maxL = max(len(r.prompt) for r in self._queue)
+            # on resume the snapshot's prompt width wins (None lets the
+            # engine bind from it; new prompts must fit within it)
+            maxL = (max(len(r.prompt) for r in self._queue)
+                    if self._queue and not resume else None)
             # construct BEFORE emptying the queue: an unsupported cfg
             # (abs-pos/enc-dec/vision) raises here and the submitted
             # requests stay queued for run_all()/exact groups

@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -155,6 +155,19 @@ def request_budget(req, cap: int) -> int:
     return bud
 
 
+@dataclasses.dataclass
+class _RestoredRequest:
+    """A request rebuilt from a :meth:`ContinuousEngine.snapshot` tree —
+    duck-typed like :class:`repro.serve.batcher.Request` (kept here to
+    avoid an engine→batcher import cycle).  ``deadline`` is re-anchored
+    to the RESUMED process's clock from the snapshot's stored remaining
+    time."""
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: Optional[int] = None
+    deadline: Optional[float] = None
+
+
 def _arch_has_ssm(cfg: ArchConfig) -> bool:
     """Whether the stack carries SSM layers — their sequential state
     updates have no pad-masking path, so ragged (padded) prefill is
@@ -235,10 +248,21 @@ class ContinuousEngine:
         self._retire_fn = jax.jit(
             lambda done, idx: done.at[idx].set(True),
             donate_argnums=(0,))
+        # snapshot/restore of ONE slot's whole state (per-slot cache
+        # slices + carry row): the reader is un-donated (safe on the
+        # live buffers mid-stream), the writer donates like a prefill
+        self._snap_slot_fn = jax.jit(self._snap_slot_impl)
+        self._restore_slot_fn = jax.jit(
+            self._restore_slot_impl,
+            donate_argnums=(0, 1, 2, 3, 4, 5, 6))
         self.stats = {"requests": 0, "segments": 0, "prefills": 0,
                       "emitted": 0, "segment_traces": 0,
                       "prefill_traces": 0, "slot_steps": 0,
-                      "idle_slot_steps": 0, "evicted": 0, "shed": 0}
+                      "idle_slot_steps": 0, "evicted": 0, "shed": 0,
+                      "snapshots": 0, "replayed_items": 0,
+                      "recovered_occupants": 0, "recovery_seconds": 0.0}
+        self._resume_state = None       # staged by restore()
+        self._rt_capture = None         # live snapshot closure
 
     # -- static geometry (first run binds the shapes) --------------------
     def _bind(self, prompt_len: int):
@@ -298,6 +322,84 @@ class ContinuousEngine:
         plens = plens.at[idx].set(plen)
         return caches, out, done, t, budget, keys, plens
 
+    # -- slot snapshot / restore (preemption recovery) -------------------
+    def _snap_slot_impl(self, caches, idx):
+        """Slice ONE slot's cache state out (prefix leaves carry the
+        sequence on axis 0, unit leaves on axis 1 — the same convention
+        ``_prefill_impl``'s slot_write uses)."""
+        pfx = jax.tree.map(
+            lambda b: jax.lax.dynamic_slice_in_dim(b, idx, 1, axis=0),
+            caches["prefix"])
+        unit = jax.tree.map(
+            lambda b: jax.lax.dynamic_slice_in_dim(b, idx, 1, axis=1),
+            caches["unit"])
+        return pfx, unit
+
+    def _restore_slot_impl(self, caches, out, done, t, budget, keys,
+                           plens, idx, pfx, unit, out_row, dn, tv, budv,
+                           keyv, plenv):
+        """Re-seat one snapshotted in-flight decode into slot ``idx``
+        (possibly a different slot index than it occupied pre-crash —
+        the resumed engine may have a different slot count): the saved
+        cache slices write through the SAME whole-slot paths a prefill
+        uses, and the carry row (out/done/t/budget/key/plen) re-arms
+        with the saved values so decoding continues mid-generation,
+        sampling included (the PRNG key is part of the carry)."""
+        def slot_write(axis):
+            return lambda b, f: jax.lax.dynamic_update_slice_in_dim(
+                b, f.astype(b.dtype), idx, axis=axis)
+        caches = {"prefix": jax.tree.map(slot_write(0), caches["prefix"],
+                                         pfx),
+                  "unit": jax.tree.map(slot_write(1), caches["unit"],
+                                       unit)}
+        out = out.at[idx].set(out_row.astype(out.dtype))
+        done = done.at[idx].set(dn)
+        t = t.at[idx].set(jnp.asarray(tv, t.dtype))
+        budget = budget.at[idx].set(jnp.asarray(budv, budget.dtype))
+        keys = keys.at[idx].set(keyv.astype(keys.dtype))
+        plens = plens.at[idx].set(jnp.asarray(plenv, plens.dtype))
+        return caches, out, done, t, budget, keys, plens
+
+    def snapshot(self) -> dict:
+        """The in-flight serve state as ONE logical tree: every occupied
+        slot's KV-cache slices, output row, position/budget/PRNG-key
+        carry, its request (deadline stored as REMAINING seconds — it
+        re-anchors to the resumed process's clock), the not-yet-admitted
+        queue, and the admission-key cursor (``stats["prefills"]`` — so
+        post-resume admissions sample the same keys an uninterrupted run
+        would).  Topology-free over ``slots``: restore onto a pool of
+        any size.  Only meaningful at a segment boundary (use
+        ``on_segment``, or pass ``recovery=`` to :meth:`run`)."""
+        if self._rt_capture is None:
+            raise ValueError(
+                "snapshot() captures in-flight serve state; nothing has "
+                "run yet — call run() (pass recovery= to persist "
+                "snapshots automatically)")
+        return self._rt_capture()
+
+    def restore(self, state: dict) -> "ContinuousEngine":
+        """Stage a :meth:`snapshot` tree; the next :meth:`run` resumes
+        from it (in-flight decodes continue mid-generation, queued
+        requests re-queue ahead of new ones).  The engine's ``slots``
+        may differ from the snapshotting engine's; the generation cap
+        and bound prompt width may not."""
+        if not isinstance(state, dict) or state.get("kind") != "serve":
+            raise ValueError("not a ContinuousEngine snapshot tree")
+        if int(state.get("version", -1)) != 1:
+            raise ValueError("unsupported ContinuousEngine snapshot "
+                             f"version {state.get('version')!r}")
+        if int(state["cap"]) != self.gcfg.max_new_tokens:
+            raise ValueError(
+                f"snapshot generation cap {state['cap']} != engine cap "
+                f"{self.gcfg.max_new_tokens} (the out-buffer width is "
+                "part of the slot geometry)")
+        if self._bound and int(state["S0"]) != self._S0:
+            raise ValueError(
+                f"snapshot prompt width {state['S0']} != bound slot "
+                f"width {self._S0}")
+        self._resume_state = state
+        return self
+
     # -- one bounded decode segment --------------------------------------
     def _segment_impl(self, params, caches, out, done, t, budget, keys,
                       plens):
@@ -345,7 +447,9 @@ class ContinuousEngine:
         return caches, out, done, t, budget, keys, plens, steps
 
     # -- the dispatcher ---------------------------------------------------
-    def run(self, requests, emit, *, clock=None) -> int:
+    def run(self, requests, emit, *, clock=None, recovery=None,
+            resume: bool = False,
+            on_segment: Optional[Callable] = None) -> int:
         """Serve ``requests`` (RAGGED prompt lengths and wildly
         different ``.max_new_tokens`` welcome) through the slots,
         calling ``emit(rid, tokens, status)`` the moment each finishes —
@@ -363,15 +467,107 @@ class ContinuousEngine:
         path — or retired in place when the queue is empty
         (``stats["evicted"]``).  No deadline → the request always runs
         to EOS or budget (``status="ok"``).
+
+        Preemption recovery (DESIGN.md §Recovery): with ``recovery=``
+        (a :class:`repro.resilience.recovery.RecoveryConfig`) every
+        emission is write-ahead journaled (fsync'd, CRC-framed) BEFORE
+        the ``emit`` callback runs, and the whole in-flight serve state
+        — see :meth:`snapshot` — publishes atomically every
+        ``snapshot_every`` segments.  ``resume=True`` restarts a killed
+        run: the journal replays pre-crash emissions (each ``rid``
+        suppressed from re-emission — rids must be unique per request,
+        they are the exactly-once key), snapshotted in-flight decodes
+        re-seat into slots and continue mid-generation (on a pool of
+        ANY slot count — elastic resume; extras wait their turn ahead
+        of the queue), queued requests re-queue ahead of new ones, and
+        deadlines re-anchor to this process's clock from their stored
+        remaining time.  ``on_segment`` is called with the cumulative
+        segment count at every segment boundary — the seam
+        ``FaultPlan.preempt_hook`` kills through.
         """
         clock = time.monotonic if clock is None else clock
-        queue = list(requests)
-        if not queue:
-            return 0
+        t_resume0 = time.perf_counter()
+        if self._resume_state is None and recovery is not None and resume:
+            from repro.resilience.recovery import load_snapshot
+            st = load_snapshot(recovery.snap_dir)
+            if st is not None:
+                self.restore(st)    # validates kind / version / cap / S0
+        state = None
+        if self._resume_state is not None:
+            state, self._resume_state = self._resume_state, None
+
         cap = self.gcfg.max_new_tokens
+        journal = None
+        emitted_pre: set = set()
+        n_emit = 0
+
+        def deliver(rid, tokens, status, journal_rec=True):
+            """WAL-ordered emission: journal (fsync'd) FIRST, then the
+            ``emit`` callback — a crash between the two re-delivers
+            from the journal on resume, never re-decodes."""
+            nonlocal n_emit
+            if journal is not None and journal_rec:
+                journal.append({"rid": rid,
+                                "tokens": [int(x) for x in tokens],
+                                "status": status})
+            emit(rid, tokens, status)
+            n_emit += 1
+
+        if recovery is not None and resume:
+            from repro.resilience.recovery import Journal
+            for rec in Journal.replay(recovery.journal_path):
+                rid = rec["rid"]
+                if rid in emitted_pre:
+                    continue
+                emitted_pre.add(rid)
+                deliver(rid, np.asarray(rec["tokens"], np.int32),
+                        rec.get("status", "ok"), journal_rec=False)
+                self.stats["replayed_items"] += 1
+        if recovery is not None:
+            from repro.resilience.recovery import Journal
+            journal = Journal(recovery.journal_path,
+                              fsync=recovery.fsync)
+
+        queue = list(requests)
+        restore_q: list = []
+        if state is not None:
+            # segment counter restores so snapshot step numbering (and
+            # preempt thresholds) stay monotonic across restarts; the
+            # prefill counter is the admission-key cursor — restoring
+            # it makes post-resume admissions sample the same keys an
+            # uninterrupted run would
+            self.stats["segments"] = int(state.get("segments", 0))
+            self.stats["prefills"] = int(state.get("prefills", 0))
+            restore_q = [dict(e) for e in state.get("occupants") or ()]
+            now0 = clock()
+            requeued = []
+            for q in state.get("queue") or ():
+                rem = q.get("deadline_remaining")
+                requeued.append(_RestoredRequest(
+                    rid=q["rid"],
+                    prompt=np.asarray(q["prompt"], np.int32),
+                    max_new_tokens=q.get("max_new_tokens"),
+                    deadline=(now0 + float(rem)) if rem is not None
+                    else None))
+            queue = requeued + queue    # pre-crash admissions first
+        if not queue and not restore_q:
+            if journal is not None:
+                journal.close()
+            if state is not None or resume:
+                self.stats["recovery_seconds"] += (
+                    time.perf_counter() - t_resume0)
+            return n_emit
         lens = [len(r.prompt) for r in queue]
-        bound = (self._S0 if self._bound
-                 else (self.max_prompt_len or max(lens)))
+        if state is not None:
+            bound = int(state["S0"])
+            if self.max_prompt_len and self.max_prompt_len != bound:
+                raise ValueError(
+                    f"engine max_prompt_len={self.max_prompt_len} != "
+                    f"snapshot prompt width {bound} (the restored cache "
+                    "slices carry the snapshotting pool's width)")
+        else:
+            bound = (self._S0 if self._bound
+                     else (self.max_prompt_len or max(lens, default=1)))
         for r, L in zip(queue, lens):
             if not 1 <= L <= bound:
                 raise ValueError(
@@ -391,9 +587,10 @@ class ContinuousEngine:
         caches, out, done = self._caches, self._out, self._done
         t, budget, keys = self._t, self._budget, self._keys
         plens = self._plen
+        pfx_def = jax.tree.structure(caches["prefix"])
+        unit_def = jax.tree.structure(caches["unit"])
         occupants = [None] * self.slots
         base_key = jax.random.PRNGKey(self.gcfg.seed)
-        n_emit = 0
         prev_t = np.asarray(t).astype(np.int64)
 
         def deadline_of(req):
@@ -401,14 +598,17 @@ class ContinuousEngine:
 
         def pull():
             """Next admissible request — requests already past their
-            deadline are shed here, without ever touching a slot."""
-            nonlocal n_emit
+            deadline are shed here, without ever touching a slot, and
+            requests whose emission was journaled pre-crash are dropped
+            (the replay already re-delivered them)."""
             while queue:
                 req = queue.pop()
+                if req.rid in emitted_pre:
+                    continue
                 dl = deadline_of(req)
                 if dl is not None and clock() >= dl:
-                    emit(req.rid, np.zeros((0,), np.int32), "timed_out")
-                    n_emit += 1
+                    deliver(req.rid, np.zeros((0,), np.int32),
+                            "timed_out")
                     self.stats["shed"] += 1
                     self.stats["requests"] += 1
                     continue
@@ -434,18 +634,131 @@ class ContinuousEngine:
             self.stats["prefills"] += 1
             self.stats["requests"] += 1
 
+        def fill(slot):
+            """Seat the next unit of work into a free slot: snapshotted
+            in-flight decodes first (they re-enter mid-generation,
+            whatever slot index they held pre-crash), then the queue.
+            Returns False when there is nothing left to seat."""
+            nonlocal caches, out, done, t, budget, keys, plens
+            while restore_q:
+                e = restore_q.pop(0)
+                if e["rid"] in emitted_pre:
+                    continue
+                rem = e.get("deadline_remaining")
+                req = _RestoredRequest(
+                    rid=e["rid"],
+                    prompt=np.asarray(e["prompt"], np.int32),
+                    max_new_tokens=e.get("max_new_tokens"),
+                    deadline=(clock() + float(rem)) if rem is not None
+                    else None)
+                pfx = jax.tree.unflatten(
+                    pfx_def, [jnp.asarray(l) for l in e["prefix"]])
+                unit = jax.tree.unflatten(
+                    unit_def, [jnp.asarray(l) for l in e["unit"]])
+                (caches, out, done, t, budget, keys,
+                 plens) = self._restore_slot_fn(
+                    caches, out, done, t, budget, keys, plens,
+                    jnp.asarray(slot, jnp.int32), pfx, unit,
+                    jnp.asarray(e["out"], jnp.int32),
+                    jnp.asarray(bool(e["done"])),
+                    jnp.asarray(int(e["t"]), jnp.int32),
+                    jnp.asarray(int(e["budget"]), jnp.int32),
+                    jnp.asarray(e["key"], jnp.uint32),
+                    jnp.asarray(int(e["plen"]), jnp.int32))
+                occupants[slot] = req
+                prev_t[slot] = int(e["t"])
+                self.stats["recovered_occupants"] += 1
+                return True
+            req = pull()
+            if req is None:
+                return False
+            admit(slot, req)
+            return True
+
+        def capture(complete=None):
+            """Build the :meth:`snapshot` tree from the live run state
+            (the slot reader is un-donated — the pool stays intact)."""
+            out_h = np.asarray(out)
+            done_h = np.asarray(done)
+            t_h = np.asarray(t).astype(np.int64)
+            bud_h = np.asarray(budget)
+            keys_h = np.asarray(keys)
+            plen_h = np.asarray(plens)
+            now = clock()
+            occ = []
+            for s in range(self.slots):
+                req = occupants[s]
+                if req is None:
+                    continue
+                pfx, unit = self._snap_slot_fn(
+                    caches, jnp.asarray(s, jnp.int32))
+                dl = deadline_of(req)
+                occ.append({
+                    "rid": req.rid,
+                    "prompt": np.asarray(req.prompt, np.int32),
+                    "max_new_tokens": getattr(req, "max_new_tokens",
+                                              None),
+                    "deadline_remaining": (float(dl - now)
+                                           if dl is not None else None),
+                    "done": bool(done_h[s]), "out": out_h[s].copy(),
+                    "t": int(t_h[s]), "budget": int(bud_h[s]),
+                    "key": keys_h[s].copy(), "plen": int(plen_h[s]),
+                    "prefix": [np.asarray(l)
+                               for l in jax.tree.leaves(pfx)],
+                    "unit": [np.asarray(l)
+                             for l in jax.tree.leaves(unit)]})
+            # in-flight decodes a SMALLER resumed pool has not re-seated
+            # yet survive verbatim — their slices are still topology-free
+            occ.extend(restore_q)
+            qs = []
+            for req in reversed(queue):         # stored in FIFO order
+                dl = deadline_of(req)
+                qs.append({
+                    "rid": req.rid,
+                    "prompt": np.asarray(req.prompt, np.int32),
+                    "max_new_tokens": getattr(req, "max_new_tokens",
+                                              None),
+                    "deadline_remaining": (float(dl - now)
+                                           if dl is not None else None)})
+            if complete is None:
+                complete = not occ and not qs
+            return {"kind": "serve", "version": 1,
+                    "S0": int(self._S0), "cap": int(cap),
+                    "segments": int(self.stats["segments"]),
+                    "prefills": int(self.stats["prefills"]),
+                    "occupants": occ, "queue": qs,
+                    "complete": bool(complete)}
+
+        self._rt_capture = capture
+
+        def persist(complete=None):
+            if recovery is None:
+                return
+            from repro.resilience.recovery import save_snapshot
+            save_snapshot(recovery.snap_dir, self.stats["segments"],
+                          capture(complete), keep=recovery.keep)
+            self.stats["snapshots"] += 1
+
         try:
             for slot in range(self.slots):
-                req = pull()
-                if req is None:
+                if not fill(slot):
                     break
-                admit(slot, req)
+            persist(complete=False)   # RPO anchor: recoverable before
+                                      # the first segment even starts
+            if state is not None or resume:
+                self.stats["recovery_seconds"] += (
+                    time.perf_counter() - t_resume0)
 
             while any(o is not None for o in occupants):
                 (caches, out, done, t, budget, keys, plens,
                  steps) = self._segment_fn(self.params, caches, out,
                                            done, t, budget, keys, plens)
                 self.stats["segments"] += 1
+                if on_segment is not None:
+                    # BEFORE emission — the harshest preemption window:
+                    # compute done, nothing delivered (the journal
+                    # replay + snapshot redo cover exactly this gap)
+                    on_segment(self.stats["segments"])
                 done_h = np.asarray(done)
                 t_h = np.asarray(t).astype(np.int64)
                 out_h = np.asarray(out)
@@ -464,14 +777,12 @@ class ContinuousEngine:
                     if req is None:
                         continue
                     if done_h[slot]:
-                        emit(req.rid, out_h[slot, :int(t_h[slot])].copy(),
-                             "ok")
-                        n_emit += 1
+                        deliver(req.rid,
+                                out_h[slot, :int(t_h[slot])].copy(),
+                                "ok")
                         self.stats["emitted"] += 1
                         occupants[slot] = None
-                        nxt = pull()
-                        if nxt is not None:
-                            admit(slot, nxt)
+                        fill(slot)
                         continue
                     dl = deadline_of(req)
                     if dl is not None and now >= dl:
@@ -480,17 +791,19 @@ class ContinuousEngine:
                         # next request prefills over it (the ordinary
                         # refill path evicts the stale keys wholesale),
                         # or the slot retires in place
-                        emit(req.rid, out_h[slot, :int(t_h[slot])].copy(),
-                             "timed_out")
-                        n_emit += 1
+                        deliver(req.rid,
+                                out_h[slot, :int(t_h[slot])].copy(),
+                                "timed_out")
                         self.stats["evicted"] += 1
                         occupants[slot] = None
-                        nxt = pull()
-                        if nxt is not None:
-                            admit(slot, nxt)
-                        else:
+                        if not fill(slot):
                             done = self._retire_fn(
                                 done, jnp.asarray(slot, jnp.int32))
+                if recovery is not None and \
+                        self.stats["segments"] % recovery.snapshot_every \
+                        == 0:
+                    persist()
+            persist(complete=True)
         finally:
             # locals always name the LIVE buffers (the donated inputs
             # were consumed by the calls that produced these), so a
@@ -499,4 +812,6 @@ class ContinuousEngine:
             self._caches, self._out, self._done = caches, out, done
             self._t, self._budget, self._keys = t, budget, keys
             self._plen = plens
+            if journal is not None:
+                journal.close()
         return n_emit

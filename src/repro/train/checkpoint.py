@@ -4,8 +4,13 @@ Format: one ``.npz`` of logical (unsharded) arrays + a JSON manifest with
 step / dtypes / tree structure.  bf16 leaves are stored as uint16 views
 (npz has no bf16) and restored from the manifest dtype tags.
 
-* **step-atomic**: written to ``<dir>/.tmp-<step>`` then renamed — a crash
-  mid-write never corrupts the latest checkpoint.
+* **step-atomic**: written to ``<dir>/.tmp-<step>`` then published via
+  the rename-aside protocol in ``repro.resilience.recovery`` — a crash
+  mid-write never corrupts the latest checkpoint, and re-saving an
+  existing step never has a window with no copy on disk (the old dir is
+  renamed aside before the new one is swapped in, then deleted).
+  ``latest_step``/``restore`` tolerate stray ``.tmp-*``/``.old-*`` dirs
+  left by a crash and promote an orphaned ``.old-*`` back to final.
 * **topology-free / elastic**: arrays are logical; on restore they are
   ``device_put`` against whatever mesh/sharding the *new* job uses, so a
   run can restart on a different device count (elastic scaling).  At
@@ -24,6 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.resilience import recovery as _rec
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
@@ -32,12 +39,8 @@ def _flatten(tree):
 
 def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
          extra: Optional[dict] = None) -> str:
-    os.makedirs(ckpt_dir, exist_ok=True)
-    tmp = os.path.join(ckpt_dir, f".tmp-{step}")
+    tmp = _rec.fresh_tmp_dir(ckpt_dir, str(step))
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
 
     leaves, treedef = _flatten(tree)
     arrays, dtypes = {}, {}
@@ -53,26 +56,22 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
                 "dtypes": dtypes, "extra": extra or {}}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
-    if os.path.exists(final):         # re-save at same step: overwrite
-        shutil.rmtree(final)
-    os.replace(tmp, final)            # atomic publish
+    # rename-aside publish: on a same-step re-save the previous copy is
+    # set aside (not rmtree'd) until the new one is in place, so a crash
+    # at any point leaves at least one intact copy of the step.
+    _rec.publish_dir(tmp, final)
     _retain(ckpt_dir, keep)
     return final
 
 
 def _retain(ckpt_dir: str, keep: int):
-    steps = sorted(d for d in os.listdir(ckpt_dir)
-                   if d.startswith("step_"))
-    for d in steps[:-keep]:
-        shutil.rmtree(os.path.join(ckpt_dir, d))
+    for s in _rec.list_steps(ckpt_dir)[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"))
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
-    if not os.path.isdir(ckpt_dir):
-        return None
-    steps = sorted(d for d in os.listdir(ckpt_dir)
-                   if d.startswith("step_"))
-    return int(steps[-1].split("_")[1]) if steps else None
+    steps = _rec.list_steps(ckpt_dir)  # sweeps stray .tmp-*/.old-* dirs
+    return steps[-1] if steps else None
 
 
 def restore(ckpt_dir: str, template: Any, *, step: Optional[int] = None,
@@ -89,6 +88,8 @@ def restore(ckpt_dir: str, template: Any, *, step: Optional[int] = None,
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    if not os.path.isdir(path):  # maybe orphaned mid-publish: promote .old
+        _rec.sweep_strays(ckpt_dir)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))

@@ -415,15 +415,21 @@ class TestContinuousFarm:
         assert [int(o.iters) for o in outs] == [3, 5]
 
     def test_sink_exception_does_not_corrupt_the_engine(self):
-        """A raising sink must leave the engine on LIVE buffers — the
-        donated carry is stored back on the failure path too
-        (regression: a second run crashed on deleted buffers)."""
+        """A raising sink degrades each affected item to a failed
+        StreamResult on ``dead_letter`` instead of killing the stream
+        (the other in-flight slots' items survive), and leaves the
+        engine on LIVE buffers — a second run must work (regression:
+        a second run crashed on deleted buffers)."""
         eng = FarmEngine(mk_countdown("jnp"), lanes=2, segment=4)
 
         def boom(r):
             raise RuntimeError("sink failed")
-        with pytest.raises(RuntimeError, match="sink failed"):
-            eng.run(trip_items([2, 3, 4]), boom, continuous=True)
+        assert eng.run(trip_items([2, 3, 4]), boom, continuous=True) == 3
+        assert eng.stats["sink_errors"] == 3
+        failed = [r for r in eng.dead_letter
+                  if r.error and "sink failed" in r.error]
+        assert sorted(r.index for r in failed) == [0, 1, 2]
+        assert all(r.status == "failed" for r in failed)
         outs = []
         assert eng.run(trip_items([2, 3, 4]), outs.append,
                        continuous=True) == 3
