@@ -83,7 +83,9 @@ def local_extents(m: int, n: int, part) -> tuple[int, int]:
 
 def auto_unroll(m: int, n: int, *, k: int = 1, block=(256, 256),
                 part=None, cap: int = 8,
-                redundancy_limit: float = 1.5) -> int:
+                redundancy_limit: float = 1.5,
+                segment: Optional[int] = None,
+                dispatch_amortize: int = 64) -> int:
     """Cost-heuristic temporal-blocking depth T for the persistent
     backends (``unroll="auto"``).
 
@@ -102,6 +104,16 @@ def auto_unroll(m: int, n: int, *, k: int = 1, block=(256, 256),
     The mesh shape enters through the LOCAL extents: more shards → smaller
     local domains → smaller feasible/profitable T, which is exactly the
     ceiling the ROADMAP notes (8 shards of a 64-row grid cap T at 4·k).
+
+    With ``segment`` set (continuous farms: ``segment`` body steps per
+    dispatch, so ``segment·T`` sweeps amortize one dispatch) the heuristic
+    additionally folds the PER-DISPATCH cost in: when the tuned
+    ``T·segment`` lands under ``dispatch_amortize`` sweeps, T is pushed
+    back up toward ``ceil(dispatch_amortize / segment)`` — feasibility
+    still binds (the halo must fit the local domain) but the redundancy
+    limit is deliberately ignored, because in that regime the dispatch
+    overhead, not the VPU, is the bottleneck: redundant ghost compute is
+    free relative to a host round trip per segment.
     """
     lm, ln = local_extents(m, n, part)
     if min(lm, ln) <= k:
@@ -117,6 +129,12 @@ def auto_unroll(m: int, n: int, *, k: int = 1, block=(256, 256),
             break
         if (1 + 2 * k * T / bm) * (1 + 2 * k * T / bn) > redundancy_limit:
             break
+        best = T
+    if segment is not None and best * segment < dispatch_amortize:
+        want = -(-dispatch_amortize // segment)        # ceil division
+        T = best
+        while T < min(want, cap) and k * (T + 1) < min(lm, ln):
+            T += 1
         best = T
     return best
 

@@ -260,6 +260,81 @@ def refill_slot_env(env_frames: jnp.ndarray, e: jnp.ndarray, idx,
     return jax.vmap(lambda f: refresh_frame(f, spec, ghost))(env_frames)
 
 
+def refill_lanes_masked(frames: jnp.ndarray, take: jnp.ndarray,
+                        interiors: jnp.ndarray, spec: FrameSpec,
+                        boundary: Boundary | str) -> jnp.ndarray:
+    """Masked BATCH refill of many lane slots in one shot — the fused
+    chained-dispatch twin of :func:`refill_slot_frame`.
+
+    ``take`` is a (lanes,) bool mask naming the slots that receive new
+    interiors this segment boundary; unmasked lanes write their CURRENT
+    interiors back (a no-op value-wise), so one O(lanes·interior)
+    select + :func:`refill_lane_frames` replaces a host-driven sequence
+    of per-slot refill dispatches.  The all-lane ghost refresh is
+    idempotent for untouched lanes (their rings already agree with
+    their domains) — the same argument the per-slot refill relies on.
+    """
+    p = spec.pad
+    cur = frames[:, p:p + spec.m, p:p + spec.n]
+    new = jnp.where(take[:, None, None], interiors.astype(frames.dtype),
+                    cur)
+    return refill_lane_frames(frames, new, spec, boundary)
+
+
+def refill_lanes_env_masked(env_frames: jnp.ndarray, take: jnp.ndarray,
+                            e: jnp.ndarray, spec: FrameSpec,
+                            boundary: Boundary | str,
+                            halo: bool = False) -> jnp.ndarray:
+    """Masked batch env refill (chained twin of :func:`refill_slot_env`):
+    taken slots receive the staged env interiors, the rest keep their
+    own — one fused select + :func:`refill_lane_env` write."""
+    if not halo:
+        cur = env_frames[:, :spec.m, :spec.n]
+        new = jnp.where(take[:, None, None], e.astype(env_frames.dtype),
+                        cur)
+        return refill_lane_env(env_frames, new, spec, boundary,
+                               halo=False)
+    p = spec.pad
+    cur = env_frames[:, p:p + spec.m, p:p + spec.n]
+    new = jnp.where(take[:, None, None], e.astype(env_frames.dtype), cur)
+    return refill_lane_env(env_frames, new, spec, boundary, halo=True)
+
+
+# ---------------------------------------------------------------------------
+# Staging ring — the device-resident refill queue of the chained
+# dispatch path.
+#
+# The host pre-device_puts the next K items' PREPPED interiors (and env
+# leaves) into a (K, m, n) ring ahead of need; the fused
+# segment+refill entry then hands finished slots their next occupants
+# straight from the ring via a device-side read cursor — no fresh host
+# transfer, no host round trip, at any segment boundary in steady
+# state.  The ring holds logical (m, n) interiors, not frames: the
+# masked refill above re-derives ghosts/round-up exactly as a
+# host-admitted item would, so ring-seated and host-seated occupants
+# are bit-identical.
+# ---------------------------------------------------------------------------
+
+
+def alloc_stage_ring(depth: int, entry_shape: tuple,
+                     dtype) -> jnp.ndarray:
+    """Allocate a depth-K staging ring of per-item entries — once, at
+    stream start (host-side zeros; callers device_put with their own
+    sharding)."""
+    import numpy as np
+    return np.zeros((depth, *entry_shape), dtype)
+
+
+def stage_ring_write(ring: jnp.ndarray, entry: jnp.ndarray,
+                     pos) -> jnp.ndarray:
+    """Write one prepped entry at ring position ``pos`` (a traced
+    scalar — one compilation serves every stage of the stream; under
+    jit donation the ring updates in place)."""
+    return jax.lax.dynamic_update_slice(
+        ring, entry[None].astype(ring.dtype),
+        (pos,) + (0,) * entry.ndim)
+
+
 def lane_env_frames(e: jnp.ndarray, spec: FrameSpec,
                     boundary: Boundary | str,
                     halo: bool = False) -> jnp.ndarray:

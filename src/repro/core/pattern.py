@@ -298,10 +298,14 @@ class LoopOfStencilReduce:
                            finalize=lambda a: a)
 
     # -- unroll resolution (the T auto-tuner seam) -----------------------
-    def _resolve_unroll(self, shape) -> "LoopOfStencilReduce":
+    def _resolve_unroll(self, shape,
+                        segment=None) -> "LoopOfStencilReduce":
         """Resolve ``unroll="auto"`` against the grid shape (and mesh for
         the sharded backend), and fail loudly on an infeasible explicit T.
-        Returns ``self`` when nothing changes, else a resolved copy."""
+        Returns ``self`` when nothing changes, else a resolved copy.
+        ``segment`` (continuous farms: body steps per dispatch) folds the
+        per-dispatch cost into the tuning — see
+        :func:`~repro.core.executor.auto_unroll`."""
         from .executor import auto_unroll, check_unroll_feasible
 
         if shape is None or len(shape) < 2:
@@ -314,7 +318,7 @@ class LoopOfStencilReduce:
         if self.unroll == "auto":
             deep = self.backend in ("pallas-multistep", "pallas-sharded")
             T = auto_unroll(m, n, k=self.k, block=self.block,
-                            part=part) if deep else 1
+                            part=part, segment=segment) if deep else 1
             return dataclasses.replace(self, unroll=T)
         if self.backend in ("pallas", "pallas-multistep",
                             "pallas-sharded"):

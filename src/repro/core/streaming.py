@@ -52,6 +52,7 @@ instead.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from itertools import islice
 from typing import Any, Callable, Iterator, Optional
 
@@ -345,6 +346,21 @@ class FarmEngine:
     check_finite: bool = True          # admission-time NaN/Inf guard on
                                        # every item leaf (host-side
                                        # O(item) scan)
+    chained: bool = True               # continuous mode: chain segments
+                                       # through the fused segment+refill
+                                       # entry (device staging ring, no
+                                       # blocking host sync in steady
+                                       # state); False restores the
+                                       # classic dispatch→sync→per-slot-
+                                       # refill loop.  The composed
+                                       # pallas-sharded deployment always
+                                       # runs the classic loop (its
+                                       # fixed-step segments have no
+                                       # early exit to chain past, and
+                                       # its refill must stay inside the
+                                       # spatial shard_map).
+    stage_depth: Optional[int] = None  # staging-ring depth K (chained
+                                       # mode); None = max(2*lanes, 2)
 
     def __post_init__(self):
         loop = self.loop
@@ -388,6 +404,9 @@ class FarmEngine:
         if self.slot_patience < 1:
             raise ValueError(
                 f"slot_patience must be >= 1; got {self.slot_patience}")
+        if self.stage_depth is not None and self.stage_depth < 1:
+            raise ValueError(
+                f"stage_depth must be >= 1; got {self.stage_depth}")
         self.dead_letter: list = []     # items that exhausted retries /
                                         # were rejected at admission
                                         # (their emitted StreamResults)
@@ -409,6 +428,13 @@ class FarmEngine:
         self._restore_fn = jax.jit(self._restore_impl,
                                    donate_argnums=(0, 1, 2, 3, 4, 5))
         self._extract_fn = jax.jit(self._extract_impl)
+        # the chained dispatch path: ONE fused segment + masked batch
+        # refill + emission-capture entry (slot buffers AND the staging
+        # ring donated — everything updates in place, segment to
+        # segment, with only async metadata reads on the host side)
+        self._chain_fn = jax.jit(self._chain_entry,
+                                 donate_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
+        self._stage_fn = jax.jit(self._stage_impl, donate_argnums=(0, 1))
         self._waste_buf: list = []      # (waste, iters, hw, count)
                                         # device tuples, converted
                                         # lazily (no sync in the
@@ -419,6 +445,7 @@ class FarmEngine:
                       "quarantined_lane_steps": 0, "retries": 0,
                       "rejected": 0, "quarantined_slots": 0,
                       "segment_traces": 0, "refill_traces": 0,
+                      "chain_traces": 0, "stage_traces": 0,
                       "sink_errors": 0, "snapshots": 0,
                       "replayed_items": 0, "recovered_occupants": 0,
                       "recovery_seconds": 0.0}
@@ -442,7 +469,12 @@ class FarmEngine:
                 f"stream items must be 2-D grids; prep produced "
                 f"{a_aval.shape}")
         m, n = a_aval.shape[1:]
-        self._loop = self.loop._resolve_unroll((m, n))
+        # continuous mode folds the segment length into unroll="auto":
+        # the tuned segment (T·segment sweeps per dispatch) amortizes
+        # the remaining per-dispatch cost of the chained path
+        self._loop = self.loop._resolve_unroll(
+            (m, n),
+            segment=self.segment if self._mode == "continuous" else None)
         loop = self._loop
         self._prep_avals = (a_aval, env_avals)
         self._nshards = (1 if self.mesh is None
@@ -772,6 +804,9 @@ class FarmEngine:
 
     def _segment_entry(self, frames, env_frames, r, it, done, hw):
         self.stats["segment_traces"] += 1      # traced once per stream
+        return self._segment_body(frames, env_frames, r, it, done, hw)
+
+    def _segment_body(self, frames, env_frames, r, it, done, hw):
         if self.mesh is None:
             return self._local_segment(frames, env_frames, r, it, done,
                                        hw)
@@ -938,6 +973,123 @@ class FarmEngine:
         return jax.lax.dynamic_slice(
             frames, (idx, p, p), (1, spec.m, spec.n))[0]
 
+    # -- chained dispatch: fused segment + ring refill + capture ---------
+    def _unframe_all(self, frames):
+        """Every lane's (m, n) domain as one (lanes, m, n) stack — the
+        chained path's emission payload, captured INSIDE the fused entry
+        (pre-refill, so it is value-identical to what the classic
+        per-slot ``_extract_fn`` would have sliced)."""
+        if self._loop.backend == "jnp":
+            return frames
+        from .frames import unframe_lanes
+        return unframe_lanes(frames, self._lspec.frame)
+
+    def _chain_refill(self, frames, env_frames, take, interiors,
+                      env_sel):
+        """Masked batch refill of every taken slot in ONE shot — the
+        fused replacement for the host loop's per-finished-slot
+        ``_refill_fn`` dispatches.  ``interiors``/``env_sel`` are the
+        staging-ring gathers ((lanes, m, n) — junk rows where ``~take``
+        are masked out by the select)."""
+        loop = self._loop
+        if loop.backend == "jnp":
+            frames = jnp.where(take[:, None, None],
+                               interiors.astype(frames.dtype), frames)
+            env_frames = tuple(
+                jnp.where(take.reshape((-1,) + (1,) * (ef.ndim - 1)),
+                          e.astype(ef.dtype), ef)
+                for ef, e in zip(env_frames, env_sel))
+            return frames, env_frames
+        from .frames import refill_lanes_env_masked, refill_lanes_masked
+        spec = self._lspec.frame
+        frames = refill_lanes_masked(frames, take, interiors, spec,
+                                     loop.boundary)
+        env_frames = tuple(
+            refill_lanes_env_masked(ef, take, e, spec, loop.boundary,
+                                    halo=self._eng._halo_env)
+            for ef, e in zip(env_frames, env_sel))
+        return frames, env_frames
+
+    def _chain_entry(self, frames, env_frames, r, it, done, hw, ring,
+                     ring_envs, rd, wr, live):
+        """ONE donated jitted dispatch of the chained path: run a
+        segment, CAPTURE the finished lanes' emission payloads (domains,
+        reduce/iter/health — all pre-refill), then hand every finished
+        live slot its next occupant straight from the staging ring via
+        the device-side cursor ``rd`` — a masked batch refill, no host
+        round trip, no per-slot dispatch.
+
+        ``rd`` is device-resident (threaded call to call — only the
+        device knows how many slots each segment finished); ``wr`` is
+        the host's staged-count watermark, pushed as a fresh scalar per
+        dispatch.  ``live`` masks quarantined slots out of the seating —
+        it lags one in-flight dispatch behind the host's quarantine
+        decisions (documented divergence from the classic loop: a
+        just-quarantined slot may be seated once more before the mask
+        catches up).  Seating follows lane order over the finished live
+        slots — exactly the order the classic loop's ascending
+        admit-per-slot produced, which is what keeps the two paths
+        bit-identical on fault-free streams.  Returns the resumed carry
+        plus ``(meta, r_pre, outs)`` for the host's ASYNC drain —
+        ``meta`` is one packed int32 vector (fin | it | hw | take |
+        steps), so the steady-state drain is a single small D2H."""
+        self.stats["segment_traces"] += 1      # traced once per stream
+        self.stats["chain_traces"] += 1
+        loop = self._loop
+        (frames, env_frames, r, it, done, hw,
+         steps) = self._segment_body(frames, env_frames, r, it, done,
+                                     hw)
+        fin = jnp.logical_or(done, it >= loop.max_iters)
+        outs = self._unframe_all(frames)
+        r_pre, it_pre, hw_pre = r, it, hw
+        elig = jnp.logical_and(fin, live)
+        e32 = elig.astype(jnp.int32)
+        rank = jnp.cumsum(e32) - e32
+        take = jnp.logical_and(elig, rank < (wr - rd))
+        K = self._ring_depth
+        pos = jnp.where(take, (rd + rank) % K, 0)
+        interiors = ring[pos]
+        env_sel = tuple(re_[pos] for re_ in ring_envs)
+        frames, env_frames = self._chain_refill(frames, env_frames,
+                                                take, interiors,
+                                                env_sel)
+        r = jnp.where(take, jnp.asarray(loop._id, r.dtype), r)
+        it = jnp.where(take, jnp.zeros_like(it), it)
+        done = jnp.where(take, jnp.zeros_like(done), done)
+        hw = jnp.where(take, jnp.zeros_like(hw), hw)
+        rd = rd + jnp.sum(take.astype(jnp.int32))
+        # ONE packed int32 metadata word per segment: the drain's whole
+        # decision state (finished mask, pre-refill iters/health, seat
+        # mask, per-shard step counts) crosses the device boundary as a
+        # single small transfer — payloads (outs, r) stay device-side
+        # until an emission actually needs them
+        meta = jnp.concatenate([
+            fin.astype(jnp.int32), it_pre.astype(jnp.int32),
+            hw_pre.astype(jnp.int32), take.astype(jnp.int32),
+            steps.astype(jnp.int32)])
+        return (frames, env_frames, r, it, done, hw, ring, ring_envs,
+                rd, meta, r_pre, outs)
+
+    def _stage_impl(self, ring, ring_envs, pos, item):
+        """Pre-stage one stream item's PREPPED interior/env into the
+        ring at ``pos`` — the host's read stage running AHEAD of need
+        (one compilation for every stage of the stream; the ring is
+        donated, so the write is in place)."""
+        self.stats["stage_traces"] += 1        # traced once per stream
+        from .frames import stage_ring_write
+        a0, envs = self._prep1(item)
+        ring = stage_ring_write(ring, a0, pos)
+        ring_envs = tuple(stage_ring_write(re_, e, pos)
+                          for re_, e in zip(ring_envs, envs))
+        return ring, ring_envs
+
+    def _meta_read(self, *arrs):
+        """THE single device→host transfer of one chained-segment drain:
+        every metadata read of a drained segment funnels through here
+        (the steady-state no-host-sync guard wraps it — one call per
+        segment, issued only AFTER the next segment is in flight)."""
+        return jax.device_get(arrs)
+
     def _check_item(self, item):
         """Guard EVERY leaf of a stream item — the main array AND any
         env leaves a tuple item carries — against mid-stream shape/dtype
@@ -980,6 +1132,27 @@ class FarmEngine:
         the lane frames ``_bind`` staged) plus the per-lane (r, it, done)
         vectors — all slots start retired (done, unoccupied)."""
         loop = self._loop
+        if self.chained and loop.backend != "pallas-sharded" \
+                and getattr(self, "_ring", None) is None:
+            # the staging ring: K prepped (m, n) interiors (+ env
+            # leaves) ahead of need, allocated once, donated in place
+            # ever after.  Replicated under a lane mesh — every lane
+            # shard gathers its own seats from the same ring.
+            from .frames import alloc_stage_ring
+            a_aval, env_avals = self._prep_avals
+            K = self.stage_depth or max(2 * self.lanes, 2)
+            self._ring_depth = K
+            ring = alloc_stage_ring(K, a_aval.shape[1:], a_aval.dtype)
+            rengs = tuple(alloc_stage_ring(K, e.shape[1:], e.dtype)
+                          for e in env_avals)
+            if self.mesh is None:
+                self._ring = jnp.asarray(ring)
+                self._ring_envs = tuple(jnp.asarray(x) for x in rengs)
+            else:
+                rep = NamedSharding(self.mesh, P())
+                self._ring = jax.device_put(ring, rep)
+                self._ring_envs = tuple(jax.device_put(x, rep)
+                                        for x in rengs)
         if getattr(self, "_cont_carry", None) is not None:
             return          # slots + carry persist across streams: the
                             # end state (all lanes retired) is exactly a
@@ -1232,6 +1405,13 @@ class FarmEngine:
         slot_dead = [False] * L           # quarantined slots
         slot_fails = [0] * L              # consecutive non-ok finishes
         retry_q: list = []
+        staged: deque = deque()           # entries resident in the
+                                          # staging ring (chained mode),
+                                          # ring-FIFO order
+        pending_entries: deque = deque()  # entries pulled off the
+                                          # stream but unstaged (repair
+                                          # rewinds the ring through
+                                          # here) — ahead of the cursor
         prev_it = np.zeros((L,), np.int64)
 
         if state is not None:
@@ -1278,6 +1458,8 @@ class FarmEngine:
             for i, e in enumerate(retry_q):
                 if slot not in e["bad_slots"]:
                     return retry_q.pop(i)
+            if pending_entries:     # unstaged ring entries precede the
+                return pending_entries.popleft()   # stream cursor
             e = pull_stream()
             if e is not None:
                 return e
@@ -1361,15 +1543,19 @@ class FarmEngine:
                             "item": e["item"], "a": a_mid,
                             "r": r_cur[s], "it": int(it_cur[s]),
                             "hw": int(hw_cur[s])})
+            queued = list(retry_q) + list(staged) + list(pending_entries)
             if complete is None:
-                complete = not occ and not retry_q
+                complete = not occ and not queued
             return {"kind": "farm", "version": 1,
                     "segments": int(self.stats["segments"]),
                     "next_index": int(next_index), "n_out": int(n_out),
                     "occupants": occ,
+                    # retries first, then ring-staged / unstaged entries
+                    # in stream order — a staged-but-unseated item is
+                    # queued work the resumed run must not lose
                     "retry": [{"index": int(e["index"]),
                                "attempts": int(e["attempts"]),
-                               "item": e["item"]} for e in retry_q],
+                               "item": e["item"]} for e in queued],
                     "complete": bool(complete)}
 
         self._rt_capture = capture
@@ -1382,56 +1568,143 @@ class FarmEngine:
                           capture(complete), keep=recovery.keep)
             self.stats["snapshots"] += 1
 
-        try:
-            for slot in range(L):
-                admit(slot)
-                if occupants[slot] is None:     # stream already drained
-                    break
-            # retired slots may carry iteration counts from a previous
-            # stream — baseline the useful-work deltas on the real carry
-            prev_it = np.asarray(itv).astype(np.int64)
-            persist(complete=False)   # RPO anchor: recoverable before
-                                      # the first segment even starts
-            if state is not None or resume:
-                self.stats["recovery_seconds"] += (
-                    _time.perf_counter() - t_resume0)
+        ring = getattr(self, "_ring", None)
+        ring_envs = getattr(self, "_ring_envs", ())
 
+        def run_chained():
+            """The chained dispatch pipeline: stage(t+1) ∥ run(t) ∥
+            drain(t−1).  Every steady-state segment boundary is ONE
+            donated ``_chain_fn`` dispatch — segment, emission capture
+            and masked batch refill from the device staging ring fused
+            into a single jitted call — and the host touches segment
+            t's results only through a non-blocking metadata read issued
+            AFTER segment t+1 is already in flight.  Retries drop to a
+            synchronous repair phase (classic retry-first / bad-slot /
+            quarantine admission, ring rewound through
+            ``pending_entries``), then the chain resumes."""
+            nonlocal frames, env_frames, r, itv, done, hw, prev_it
+            nonlocal ring, ring_envs
+            K = self._ring_depth
             local_L = L // self._nshards
-            while any(o is not None for o in occupants):
-                (frames, env_frames, r, itv, done, hw,
-                 steps) = self._segment_fn(frames, env_frames, r, itv,
-                                           done, hw)
+            rd = jnp.asarray(0, jnp.int32)   # device-side read cursor
+            wr_host = 0                      # staged-count watermark
+            rd_host = 0                      # host mirror of rd (lags
+                                             # by the in-flight takes)
+            inflight: deque = deque()        # dispatched, undrained
+
+            def stage_next():
+                """Admission-checked staging of ONE entry into the ring
+                (the chained twin of ``admit``): rejected items emit
+                without touching the ring, journal-replayed indexes
+                skip, everything else device_puts AHEAD of need."""
+                nonlocal ring, ring_envs, wr_host
+                while True:
+                    if pending_entries:
+                        entry = pending_entries.popleft()
+                    else:
+                        entry = pull_stream()
+                    if entry is None:
+                        return False
+                    if entry["index"] in emitted_pre:
+                        continue
+                    try:
+                        self._check_item(entry["item"])
+                    except NonFiniteItemError:
+                        self.stats["rejected"] += 1
+                        emit(entry, "rejected")
+                        continue
+                    break
+                # item leaves ride as numpy through the jit fast path —
+                # no eager per-leaf device_put on the host's stage side
+                ring, ring_envs = self._stage_fn(
+                    ring, ring_envs, np.int32(wr_host % K),
+                    entry["item"])
+                staged.append(entry)
+                wr_host += 1
+                self.stats["h2d_bytes"] += _item_nbytes(entry["item"])
+                return True
+
+            def top_up():
+                # rd_host is a conservative lower bound on the device
+                # cursor, so staying < K deep can never overwrite a
+                # ring position an in-flight chain might still read
+                while wr_host - rd_host < K:
+                    if not stage_next():
+                        return
+
+            def unstage_all():
+                """Rewind the ring at a repair boundary: un-seated
+                entries re-queue (stream order) ahead of the cursor,
+                their device copies are abandoned, and the watermark
+                drops back to the mirror cursor — safe because the
+                pipeline is fully drained here."""
+                nonlocal wr_host
+                while staged:
+                    pending_entries.appendleft(staged.pop())
+                wr_host = rd_host
+
+            # the live mask changes only on quarantine — cache its
+            # device copy so the steady-state dispatch pays no per-call
+            # host→device conversion (the per-dispatch `wr` watermark
+            # rides as a numpy scalar through the jit fast path)
+            live_cache = [None, None]          # (key, device array)
+
+            def live_mask():
+                key = tuple(slot_dead)
+                if live_cache[0] != key:
+                    live_cache[0] = key
+                    live_cache[1] = jnp.asarray(
+                        np.logical_not(slot_dead))
+                return live_cache[1]
+
+            def dispatch():
+                nonlocal frames, env_frames, r, itv, done, hw
+                nonlocal ring, ring_envs, rd
+                (frames, env_frames, r, itv, done, hw, ring, ring_envs,
+                 rd, meta, r_pre, outs) = self._chain_fn(
+                     frames, env_frames, r, itv, done, hw, ring,
+                     ring_envs, rd, np.int32(wr_host), live_mask())
                 self.stats["segments"] += 1
                 if on_segment is not None:
-                    # the preemption seam: fires BEFORE this segment's
-                    # results are journaled — the harshest crash point
-                    # (computed-but-unjournaled work is redone from the
-                    # last snapshot, never re-emitted)
+                    # the preemption seam, as in the classic loop:
+                    # fires while the segment's results are still
+                    # un-journaled (redone from the last snapshot,
+                    # never re-emitted)
                     on_segment(self.stats["segments"])
-                done_h = np.asarray(done)
-                it_h = np.asarray(itv).astype(np.int64)
-                r_h = np.asarray(r)
-                hw_h = np.asarray(hw)
-                steps_h = np.asarray(steps).astype(np.int64)
-                # lane-step accounting: every body step advances (or
-                # idles) every lane of its shard by `unroll` sweeps
+                inflight.append((meta, r_pre, outs))
+
+            def drain_one():
+                """Consume the OLDEST in-flight segment: one async
+                metadata read (``_meta_read`` — by now the next segment
+                is dispatched, so the device never idles on this),
+                then classic emission / retry / quarantine bookkeeping
+                and the host-mirror replay of the device's ring seats
+                (lane order over the finished live slots = the device's
+                rank order)."""
+                nonlocal prev_it, rd_host
+                meta_d, r_d, outs_d = inflight.popleft()
+                (meta_h,) = self._meta_read(meta_d)
+                fin_h = meta_h[0:L] != 0
+                it_h = meta_h[L:2 * L].astype(np.int64)
+                hw_h = meta_h[2 * L:3 * L]
+                took_h = meta_h[3 * L:4 * L] != 0
+                steps_h = meta_h[4 * L:]
                 for s in range(self._nshards):
                     sl = slice(s * local_L, (s + 1) * local_L)
                     total = int(steps_h[s]) * unroll * local_L
                     useful = int((it_h[sl] - prev_it[sl]).sum())
                     self.stats["lane_steps"] += total
                     self.stats["wasted_lane_steps"] += total - useful
-                prev_it = it_h.copy()
-                finished = done_h | (it_h >= loop.max_iters)
+                prev_it = np.where(took_h, 0, it_h)
+                outs_h = r_h = None
                 for slot in range(L):
                     entry = occupants[slot]
-                    if entry is None or not finished[slot]:
+                    if entry is None or not fin_h[slot]:
                         continue
                     occupants[slot] = None
                     status = item_status(hw_h[slot], it_h[slot],
                                          loop.max_iters)
                     if status != "ok":
-                        # sweeps burned on a doomed occupant
                         self.stats["quarantined_lane_steps"] += \
                             int(it_h[slot])
                         slot_fails[slot] += 1
@@ -1443,8 +1716,10 @@ class FarmEngine:
                         retry_q.append(entry)
                         self.stats["retries"] += 1
                     else:
-                        out = np.asarray(self._extract_fn(
-                            frames, jnp.asarray(slot, jnp.int32)))
+                        if outs_h is None:   # ONE payload pull per
+                            outs_h, r_h = jax.device_get(  # drained seg
+                                (outs_d, r_d))
+                        out = outs_h[slot]
                         self.stats["d2h_bytes"] += (
                             out.nbytes + r_h[slot].nbytes + 4)
                         emit(entry, status, a=out, reduced=r_h[slot],
@@ -1452,18 +1727,175 @@ class FarmEngine:
                     if (not slot_dead[slot]
                             and slot_fails[slot] >= self.slot_patience
                             and L - sum(slot_dead) > 1):
-                        # the failures track the SLOT, not its items:
-                        # retire it from the rotation (never the last
-                        # slot standing)
+                        # quarantine lags one in-flight dispatch: the
+                        # chain already in flight may seat one more
+                        # occupant here before the live mask catches up
                         slot_dead[slot] = True
                         self.stats["quarantined_slots"] += 1
+                for slot in range(L):
+                    if not took_h[slot]:
                         continue
-                    if not slot_dead[slot]:
-                        admit(slot)
-                if recovery is not None and \
+                    assert staged, "device seated more than was staged"
+                    entry = staged.popleft()
+                    entry["attempts"] += 1
+                    occupants[slot] = entry
+                    self.stats["refills"] += 1
+                    rd_host += 1
+
+            while True:
+                dispatched = False
+                if retry_q:
+                    # repair: drain the pipeline, rewind the ring, and
+                    # run synchronously on classic admission until the
+                    # retry queue is dry (quarantine-exact, retry-first,
+                    # bad-slot-aware — the fault contracts unchanged)
+                    while inflight:
+                        drain_one()
+                    unstage_all()
+                    for slot in range(L):
+                        if occupants[slot] is None \
+                                and not slot_dead[slot]:
+                            admit(slot)
+                    if not any(o is not None for o in occupants):
+                        break
+                    dispatch()
+                    dispatched = True
+                    drain_one()
+                else:
+                    top_up()
+                    work = (any(o is not None for o in occupants)
+                            or bool(staged) or bool(pending_entries))
+                    if not work and not inflight:
+                        break
+                    if work:
+                        dispatch()
+                        dispatched = True
+                    # lag-1 drain: with a fresh dispatch in flight,
+                    # consume only the PREVIOUS segment — the read
+                    # overlaps the device's current segment.  With no
+                    # dispatch left (tail), flush what remains.
+                    if len(inflight) > (1 if dispatched else 0):
+                        drain_one()
+                if dispatched and recovery is not None and \
                         self.stats["segments"] % \
                         recovery.snapshot_every == 0:
+                    # snapshot boundary: ONE explicit pipeline drain
+                    # (instead of the classic loop's implicit blocking
+                    # sync every segment), then capture a consistent
+                    # boundary state
+                    while inflight:
+                        drain_one()
                     persist()
+
+        try:
+            local_L = L // self._nshards
+            use_chain = (self.chained
+                         and loop.backend != "pallas-sharded")
+            # a FRESH chained stream seats its whole first cohort
+            # through the staging ring: every slot starts retired, and
+            # the first chain dispatch (a zero-step segment) batch-seats
+            # from the ring — one fused call instead of L sequential
+            # put + per-slot-refill dispatches.  Resumed runs keep the
+            # classic admission: mid-flight occupants re-enter through
+            # the carry-aware restore path the ring knows nothing about.
+            chain_seed = use_chain and state is None and not resume
+            if chain_seed:
+                r = jnp.full_like(r, loop._id)
+                itv = jnp.full_like(itv, loop.max_iters)
+                done = jnp.ones_like(done)
+                hw = jnp.zeros_like(hw)
+            else:
+                for slot in range(L):
+                    admit(slot)
+                    if occupants[slot] is None:  # stream already drained
+                        break
+            # retired slots may carry iteration counts from a previous
+            # stream — baseline the useful-work deltas on the real carry
+            prev_it = np.asarray(itv).astype(np.int64)
+            persist(complete=False)   # RPO anchor: recoverable before
+                                      # the first segment even starts
+            if state is not None or resume:
+                self.stats["recovery_seconds"] += (
+                    _time.perf_counter() - t_resume0)
+
+            if use_chain:
+                # composed pallas-sharded farms stay on the classic
+                # loop below: their fixed-step segments have no early
+                # exit to chain past, and refill must live inside the
+                # spatial shard_map
+                run_chained()
+            else:
+                while any(o is not None for o in occupants):
+                    (frames, env_frames, r, itv, done, hw,
+                     steps) = self._segment_fn(frames, env_frames, r,
+                                               itv, done, hw)
+                    self.stats["segments"] += 1
+                    if on_segment is not None:
+                        # the preemption seam: fires BEFORE this
+                        # segment's results are journaled — the
+                        # harshest crash point (computed-but-
+                        # unjournaled work is redone from the last
+                        # snapshot, never re-emitted)
+                        on_segment(self.stats["segments"])
+                    done_h = np.asarray(done)
+                    it_h = np.asarray(itv).astype(np.int64)
+                    r_h = np.asarray(r)
+                    hw_h = np.asarray(hw)
+                    steps_h = np.asarray(steps).astype(np.int64)
+                    # lane-step accounting: every body step advances
+                    # (or idles) every lane of its shard by `unroll`
+                    # sweeps
+                    for s in range(self._nshards):
+                        sl = slice(s * local_L, (s + 1) * local_L)
+                        total = int(steps_h[s]) * unroll * local_L
+                        useful = int((it_h[sl] - prev_it[sl]).sum())
+                        self.stats["lane_steps"] += total
+                        self.stats["wasted_lane_steps"] += \
+                            total - useful
+                    prev_it = it_h.copy()
+                    finished = done_h | (it_h >= loop.max_iters)
+                    for slot in range(L):
+                        entry = occupants[slot]
+                        if entry is None or not finished[slot]:
+                            continue
+                        occupants[slot] = None
+                        status = item_status(hw_h[slot], it_h[slot],
+                                             loop.max_iters)
+                        if status != "ok":
+                            # sweeps burned on a doomed occupant
+                            self.stats["quarantined_lane_steps"] += \
+                                int(it_h[slot])
+                            slot_fails[slot] += 1
+                        else:
+                            slot_fails[slot] = 0
+                        if status != "ok" and \
+                                entry["attempts"] < self.max_attempts:
+                            entry["bad_slots"].add(slot)
+                            retry_q.append(entry)
+                            self.stats["retries"] += 1
+                        else:
+                            out = np.asarray(self._extract_fn(
+                                frames, jnp.asarray(slot, jnp.int32)))
+                            self.stats["d2h_bytes"] += (
+                                out.nbytes + r_h[slot].nbytes + 4)
+                            emit(entry, status, a=out,
+                                 reduced=r_h[slot], iters=it_h[slot])
+                        if (not slot_dead[slot]
+                                and slot_fails[slot] >=
+                                self.slot_patience
+                                and L - sum(slot_dead) > 1):
+                            # the failures track the SLOT, not its
+                            # items: retire it from the rotation
+                            # (never the last slot standing)
+                            slot_dead[slot] = True
+                            self.stats["quarantined_slots"] += 1
+                            continue
+                        if not slot_dead[slot]:
+                            admit(slot)
+                    if recovery is not None and \
+                            self.stats["segments"] % \
+                            recovery.snapshot_every == 0:
+                        persist()
             persist(complete=True)
         finally:
             # locals always name the LIVE buffers (the donated inputs
@@ -1472,6 +1904,8 @@ class FarmEngine:
             # deleted device buffers
             self._frames, self._env_frames = frames, env_frames
             self._cont_carry = (r, itv, done, hw)
+            if ring is not None:
+                self._ring, self._ring_envs = ring, ring_envs
             if journal is not None:
                 journal.close()
         self.stats["items"] += n_out

@@ -194,7 +194,8 @@ class Batcher:
 
     def run_continuous(self, exact_groups: Optional[bool] = None, *,
                        recovery=None, resume: bool = False,
-                       on_segment=None) -> List[Result]:
+                       on_segment=None,
+                       chained: bool = False) -> List[Result]:
         """Drain the queue with continuous batching (per-sequence KV-slot
         refill, :class:`repro.serve.engine.ContinuousEngine`).
 
@@ -215,6 +216,11 @@ class Batcher:
         ``idle_slot_steps`` comparison, and the automatic fallback for
         SSM/hybrid archs, whose sequential state updates have no
         pad-masking path).
+
+        ``chained=True`` passes through to :meth:`ContinuousEngine.run`:
+        each engine runs its group on the chained dispatch pipeline
+        (segment t+1 in flight before segment t's metadata is read —
+        see the engine docstring for the admission-lag trade).
 
         ``recovery=`` / ``resume=`` / ``on_segment=`` pass through to
         :meth:`ContinuousEngine.run` (single-pool path only — an exact
@@ -258,7 +264,7 @@ class Batcher:
             try:
                 eng.run(group, sink, clock=self.clock,
                         recovery=recovery, resume=resume,
-                        on_segment=on_segment)
+                        on_segment=on_segment, chained=chained)
             except Exception as e:           # noqa: BLE001 — degrade
                 survivors = [r for r in group if r.rid not in emitted]
                 if not survivors:

@@ -243,6 +243,19 @@ class ContinuousEngine:
                                    donate_argnums=(1, 2, 3, 4, 5, 6, 7))
         self._prefill_fn = jax.jit(self._prefill_impl,
                                    donate_argnums=(1, 2, 3, 4, 5, 6, 7))
+        # the chained-dispatch twins (run(..., chained=True)): only the
+        # KV pool is donated — the small carry rows (out/done/t/...)
+        # must SURVIVE each call, because the async drain still holds
+        # the previous segments' captures and reads them only after the
+        # next segment is in flight
+        self._chain_seg_fn = jax.jit(self._chain_seg_impl,
+                                     donate_argnums=(1,))
+        self._chain_prefill_fn = jax.jit(self._prefill_impl,
+                                         donate_argnums=(1,))
+        self._chain_restore_fn = jax.jit(self._restore_slot_impl,
+                                         donate_argnums=(0,))
+        self._chain_retire_fn = jax.jit(
+            lambda done, idx: done.at[idx].set(True))
         # deadline eviction with an empty queue: retire the slot in
         # place (same compilation for every eviction, done donated)
         self._retire_fn = jax.jit(
@@ -257,6 +270,7 @@ class ContinuousEngine:
             donate_argnums=(0, 1, 2, 3, 4, 5, 6))
         self.stats = {"requests": 0, "segments": 0, "prefills": 0,
                       "emitted": 0, "segment_traces": 0,
+                      "chain_traces": 0,
                       "prefill_traces": 0, "slot_steps": 0,
                       "idle_slot_steps": 0, "evicted": 0, "shed": 0,
                       "snapshots": 0, "replayed_items": 0,
@@ -410,6 +424,22 @@ class ContinuousEngine:
         (each slot decodes from its OWN prompt depth — ragged prompts
         share the pool)."""
         self.stats["segment_traces"] += 1       # traced once per stream
+        return self._segment_core(params, caches, out, done, t, budget,
+                                  keys, plens)
+
+    def _chain_seg_impl(self, params, caches, out, done, t, budget,
+                        keys, plens):
+        """The chained path's segment: the SAME decode core, jitted with
+        only the KV pool donated — the returned carry rows double as the
+        drain's captures (read asynchronously, one pipeline stage
+        later), so their buffers must outlive the next dispatch."""
+        self.stats["segment_traces"] += 1       # traced once per stream
+        self.stats["chain_traces"] += 1
+        return self._segment_core(params, caches, out, done, t, budget,
+                                  keys, plens)
+
+    def _segment_core(self, params, caches, out, done, t, budget, keys,
+                      plens):
         from repro.core.pattern import segmented_while
 
         B, cap = self.slots, self.gcfg.max_new_tokens
@@ -449,7 +479,8 @@ class ContinuousEngine:
     # -- the dispatcher ---------------------------------------------------
     def run(self, requests, emit, *, clock=None, recovery=None,
             resume: bool = False,
-            on_segment: Optional[Callable] = None) -> int:
+            on_segment: Optional[Callable] = None,
+            chained: bool = False) -> int:
         """Serve ``requests`` (RAGGED prompt lengths and wildly
         different ``.max_new_tokens`` welcome) through the slots,
         calling ``emit(rid, tokens, status)`` the moment each finishes —
@@ -484,6 +515,19 @@ class ContinuousEngine:
         remaining time.  ``on_segment`` is called with the cumulative
         segment count at every segment boundary — the seam
         ``FaultPlan.preempt_hook`` kills through.
+
+        ``chained=True`` switches the dispatcher to the chained
+        pipeline (the serve twin of the farm tier's device-resident
+        dispatch): segment t+1 is dispatched BEFORE segment t's
+        done/token metadata is read back, so the per-segment
+        admission/eviction round trip comes off the device's critical
+        path.  Admissions land on the latest carry and therefore LAG
+        one in-flight segment — a freed slot idles one extra segment
+        before its next occupant decodes (counted in
+        ``idle_slot_steps``), the price of never blocking the chain.
+        Snapshot boundaries drain the pipeline explicitly; emission
+        order, exactly-once and token bit-identity match the
+        synchronous path.
         """
         clock = time.monotonic if clock is None else clock
         t_resume0 = time.perf_counter()
@@ -615,6 +659,11 @@ class ContinuousEngine:
                 return req
             return None
 
+        prefill_fn = (self._chain_prefill_fn if chained
+                      else self._prefill_fn)
+        restore_fn = (self._chain_restore_fn if chained
+                      else self._restore_slot_fn)
+
         def admit(slot, req):
             nonlocal caches, out, done, t, budget, keys, plens
             bud = request_budget(req, cap)
@@ -623,7 +672,7 @@ class ContinuousEngine:
             prompt[:len(ptoks)] = ptoks
             key = jax.random.fold_in(base_key, self.stats["prefills"])
             (caches, out, done, t, budget, keys,
-             plens) = self._prefill_fn(
+             plens) = prefill_fn(
                 self.params, caches, out, done, t, budget, keys, plens,
                 jnp.asarray(slot, jnp.int32), jnp.asarray(prompt),
                 jnp.asarray(len(ptoks), jnp.int32),
@@ -656,7 +705,7 @@ class ContinuousEngine:
                 unit = jax.tree.unflatten(
                     unit_def, [jnp.asarray(l) for l in e["unit"]])
                 (caches, out, done, t, budget, keys,
-                 plens) = self._restore_slot_fn(
+                 plens) = restore_fn(
                     caches, out, done, t, budget, keys, plens,
                     jnp.asarray(slot, jnp.int32), pfx, unit,
                     jnp.asarray(e["out"], jnp.int32),
@@ -739,6 +788,99 @@ class ContinuousEngine:
                           capture(complete), keep=recovery.keep)
             self.stats["snapshots"] += 1
 
+        def run_chained():
+            """The serve twin of the farm tier's chained dispatch:
+            segment t+1 dispatches BEFORE segment t's metadata is read,
+            so the admission/eviction round trip runs while the device
+            decodes.  Seating lands on the LATEST carry — an occupant
+            seated during the drain of segment t was not in segment
+            t+1's flight, so every in-flight capture carries its
+            dispatch ordinal and the drain skips slots whose occupant
+            was seated at or after it (``seated_at`` epoch guard: the
+            captured done/t/out rows there belong to the previous
+            occupant)."""
+            nonlocal caches, out, done, t, budget, keys, plens, prev_t
+            from collections import deque
+            inflight: deque = deque()   # (ordinal, done, t, out, steps)
+            seated_at = np.zeros((self.slots,), np.int64)
+            ndisp = 0
+
+            def dispatch():
+                nonlocal caches, out, done, t, budget, keys, plens
+                nonlocal ndisp
+                (caches, out, done, t, budget, keys, plens,
+                 steps) = self._chain_seg_fn(self.params, caches, out,
+                                             done, t, budget, keys,
+                                             plens)
+                ndisp += 1
+                self.stats["segments"] += 1
+                if on_segment is not None:
+                    # the same preemption window as the classic loop:
+                    # compute in flight, nothing delivered yet
+                    on_segment(self.stats["segments"])
+                inflight.append((ndisp, done, t, out, steps))
+
+            def drain_one():
+                nonlocal prev_t, done
+                d, done_d, t_d, out_d, steps_d = inflight.popleft()
+                done_h, t_h, out_h, steps_h = jax.device_get(
+                    (done_d, t_d, out_d, steps_d))
+                t_h = t_h.astype(np.int64)
+                valid = seated_at < d
+                steps_i = int(steps_h)
+                self.stats["slot_steps"] += steps_i * self.slots
+                useful = int((t_h - prev_t)[valid].sum())
+                self.stats["idle_slot_steps"] += \
+                    steps_i * self.slots - useful
+                prev_t = np.where(valid, t_h, prev_t)
+                now = clock()
+                for slot in range(self.slots):
+                    req = occupants[slot]
+                    if req is None or not valid[slot]:
+                        continue
+                    if done_h[slot]:
+                        deliver(req.rid,
+                                out_h[slot, :int(t_h[slot])].copy(),
+                                "ok")
+                        self.stats["emitted"] += 1
+                        occupants[slot] = None
+                        if fill(slot):
+                            seated_at[slot] = ndisp
+                        continue
+                    dl = deadline_of(req)
+                    if dl is not None and now >= dl:
+                        deliver(req.rid,
+                                out_h[slot, :int(t_h[slot])].copy(),
+                                "timed_out")
+                        self.stats["evicted"] += 1
+                        occupants[slot] = None
+                        if fill(slot):
+                            seated_at[slot] = ndisp
+                        else:
+                            done = self._chain_retire_fn(
+                                done, jnp.asarray(slot, jnp.int32))
+
+            while True:
+                work = any(o is not None for o in occupants)
+                if not work and not inflight:
+                    break
+                if work:
+                    dispatch()
+                # lag-1 drain: with a fresh dispatch in flight, consume
+                # only the PREVIOUS segment — the metadata read overlaps
+                # the device's current segment.  At the tail, flush.
+                if len(inflight) > (1 if work else 0):
+                    drain_one()
+                if work and recovery is not None and \
+                        self.stats["segments"] % \
+                        recovery.snapshot_every == 0:
+                    # snapshot boundary: ONE explicit pipeline drain —
+                    # the capture below then reads a carry every
+                    # seating has landed on
+                    while inflight:
+                        drain_one()
+                    persist()
+
         try:
             for slot in range(self.slots):
                 if not fill(slot):
@@ -749,60 +891,67 @@ class ContinuousEngine:
                 self.stats["recovery_seconds"] += (
                     time.perf_counter() - t_resume0)
 
-            while any(o is not None for o in occupants):
-                (caches, out, done, t, budget, keys, plens,
-                 steps) = self._segment_fn(self.params, caches, out,
-                                           done, t, budget, keys, plens)
-                self.stats["segments"] += 1
-                if on_segment is not None:
-                    # BEFORE emission — the harshest preemption window:
-                    # compute done, nothing delivered (the journal
-                    # replay + snapshot redo cover exactly this gap)
-                    on_segment(self.stats["segments"])
-                done_h = np.asarray(done)
-                t_h = np.asarray(t).astype(np.int64)
-                out_h = np.asarray(out)
-                # idle-slot accounting (the wasted_lane_steps analogue):
-                # each body step advances every LIVE slot one token;
-                # retired/done-masked slots burn the step
-                steps_h = int(steps)
-                useful = int((t_h - prev_t).sum())
-                self.stats["slot_steps"] += steps_h * self.slots
-                self.stats["idle_slot_steps"] += \
-                    steps_h * self.slots - useful
-                prev_t = t_h.copy()
-                now = clock()
-                for slot in range(self.slots):
-                    req = occupants[slot]
-                    if req is None:
-                        continue
-                    if done_h[slot]:
-                        deliver(req.rid,
-                                out_h[slot, :int(t_h[slot])].copy(),
-                                "ok")
-                        self.stats["emitted"] += 1
-                        occupants[slot] = None
-                        fill(slot)
-                        continue
-                    dl = deadline_of(req)
-                    if dl is not None and now >= dl:
-                        # deadline eviction: the partial output emits
-                        # now and the KV slot is freed mid-batch — the
-                        # next request prefills over it (the ordinary
-                        # refill path evicts the stale keys wholesale),
-                        # or the slot retires in place
-                        deliver(req.rid,
-                                out_h[slot, :int(t_h[slot])].copy(),
-                                "timed_out")
-                        self.stats["evicted"] += 1
-                        occupants[slot] = None
-                        if not fill(slot):
-                            done = self._retire_fn(
-                                done, jnp.asarray(slot, jnp.int32))
-                if recovery is not None and \
-                        self.stats["segments"] % recovery.snapshot_every \
-                        == 0:
-                    persist()
+            if chained:
+                run_chained()
+            else:
+                while any(o is not None for o in occupants):
+                    (caches, out, done, t, budget, keys, plens,
+                     steps) = self._segment_fn(self.params, caches, out,
+                                               done, t, budget, keys,
+                                               plens)
+                    self.stats["segments"] += 1
+                    if on_segment is not None:
+                        # BEFORE emission — the harshest preemption
+                        # window: compute done, nothing delivered (the
+                        # journal replay + snapshot redo cover exactly
+                        # this gap)
+                        on_segment(self.stats["segments"])
+                    done_h = np.asarray(done)
+                    t_h = np.asarray(t).astype(np.int64)
+                    out_h = np.asarray(out)
+                    # idle-slot accounting (the wasted_lane_steps
+                    # analogue): each body step advances every LIVE
+                    # slot one token; retired/done-masked slots burn
+                    # the step
+                    steps_h = int(steps)
+                    useful = int((t_h - prev_t).sum())
+                    self.stats["slot_steps"] += steps_h * self.slots
+                    self.stats["idle_slot_steps"] += \
+                        steps_h * self.slots - useful
+                    prev_t = t_h.copy()
+                    now = clock()
+                    for slot in range(self.slots):
+                        req = occupants[slot]
+                        if req is None:
+                            continue
+                        if done_h[slot]:
+                            deliver(req.rid,
+                                    out_h[slot, :int(t_h[slot])].copy(),
+                                    "ok")
+                            self.stats["emitted"] += 1
+                            occupants[slot] = None
+                            fill(slot)
+                            continue
+                        dl = deadline_of(req)
+                        if dl is not None and now >= dl:
+                            # deadline eviction: the partial output
+                            # emits now and the KV slot is freed
+                            # mid-batch — the next request prefills
+                            # over it (the ordinary refill path evicts
+                            # the stale keys wholesale), or the slot
+                            # retires in place
+                            deliver(req.rid,
+                                    out_h[slot, :int(t_h[slot])].copy(),
+                                    "timed_out")
+                            self.stats["evicted"] += 1
+                            occupants[slot] = None
+                            if not fill(slot):
+                                done = self._retire_fn(
+                                    done, jnp.asarray(slot, jnp.int32))
+                    if recovery is not None and \
+                            self.stats["segments"] % \
+                            recovery.snapshot_every == 0:
+                        persist()
             persist(complete=True)
         finally:
             # locals always name the LIVE buffers (the donated inputs

@@ -362,7 +362,9 @@ class TestContinuousFarm:
                     lambda r: None, continuous=True)
         assert n == 7
         assert eng.stats["segment_traces"] == 1
-        assert eng.stats["refill_traces"] == 1
+        # chained + ring-seeded initial cohort: the classic per-slot
+        # refill never compiles on a fault-free stream
+        assert eng.stats["refill_traces"] == 0
         assert eng.stats["refills"] == 7
         after_first = traces["n"]
         assert after_first > 0
@@ -672,7 +674,7 @@ for backend in ("pallas", "jnp"):
         assert int(res.iters) == int(ref.iters), (res.index, res.iters)
         np.testing.assert_allclose(res.a, np.asarray(ref.a), atol=1e-5)
     assert eng.stats["segment_traces"] == 1
-    assert eng.stats["refill_traces"] == 1
+    assert eng.stats["refill_traces"] == 0   # seated through the ring
 print("OKCONT")
 """)
         assert "OKCONT" in out
